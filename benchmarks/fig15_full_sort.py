@@ -1,0 +1,31 @@
+"""Paper Fig. 15: FLiMS-based complete sort vs library sorts.
+
+std::sort / IPP analogues here: np.sort (introsort, C) and jnp.sort (XLA).
+Derived: Melem/s. The paper's claim shape: FLiMS mergesort is competitive
+with tuned library sorts at larger n.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import flims_sort
+
+
+def run():
+    rng = np.random.default_rng(1)
+    out = []
+    for logn in (12, 15, 18, 20):
+        n = 1 << logn
+        x = rng.integers(-2**31, 2**31 - 1, n).astype(np.int32)
+        jx = jnp.array(x)
+        us = time_fn(lambda: flims_sort(jx, chunk=512, w=64))
+        out.append(row(f"fig15/flims_sort/n2^{logn}", us,
+                       f"Melem_s={n / us:.1f}"))
+        us = time_fn(lambda: jnp.sort(jx))
+        out.append(row(f"fig15/jnp_sort/n2^{logn}", us,
+                       f"Melem_s={n / us:.1f}"))
+        t = time_fn(lambda: np.sort(x), repeats=3)
+        out.append(row(f"fig15/np_sort/n2^{logn}", t,
+                       f"Melem_s={n / t:.1f}"))
+    return out

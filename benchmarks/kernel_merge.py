@@ -1,0 +1,23 @@
+"""Pallas kernel benchmarks (interpret mode on CPU — correctness-path proxy;
+real perf target is TPU Mosaic). Derived: Melem/s + op counts."""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.kernels.ops import merge, sort_rows
+
+
+def run(n: int = 1 << 15):
+    rng = np.random.default_rng(4)
+    a = np.sort(rng.integers(-10**9, 10**9, n).astype(np.int32))[::-1]
+    b = np.sort(rng.integers(-10**9, 10**9, n).astype(np.int32))[::-1]
+    ja, jb = jnp.array(a), jnp.array(b)
+    out = []
+    us = time_fn(lambda: merge(ja, jb, w=128, block_out=4096), repeats=3)
+    out.append(row("kernel/flims_merge_interp", us,
+                   f"Melem_s={2 * n / us:.2f}"))
+    x = jnp.array(rng.integers(-10**9, 10**9, (64, 512)).astype(np.int32))
+    us = time_fn(lambda: sort_rows(x), repeats=3)
+    out.append(row("kernel/bitonic_chunks_interp", us,
+                   f"Melem_s={64 * 512 / us:.2f}"))
+    return out

@@ -1,0 +1,19 @@
+"""Paper §2.1 (fig.1): parallel merge tree throughput for K input lists."""
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import pmt_merge
+
+
+def run():
+    rng = np.random.default_rng(3)
+    out = []
+    for K in (4, 16, 64):
+        n = (1 << 20) // K
+        rows_ = np.sort(rng.integers(-10**9, 10**9, (K, n)).astype(np.int32),
+                        axis=1)[:, ::-1].copy()
+        jr = jnp.array(rows_)
+        us = time_fn(lambda: pmt_merge(jr, w=32))
+        out.append(row(f"pmt/K{K}", us, f"Melem_s={K * n / us:.1f}"))
+    return out

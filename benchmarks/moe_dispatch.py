@@ -1,0 +1,28 @@
+"""Framework feature: FLiMS-sorted MoE dispatch vs dense masked compute.
+
+Derived: speedup of sorted dispatch (top-k sparse) over dense (all-experts)
+at growing expert counts — the flop-saving the §Perf MoE hillclimb exploits.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.configs import get_config
+from repro.models.moe import moe_apply_dense, moe_apply_sorted, moe_init
+
+
+def run():
+    out = []
+    cfg = get_config("mixtral_8x22b").reduced(d_model=256, moe_d_ff=512,
+                                              n_experts=8,
+                                              n_experts_active=2)
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 256, cfg.d_model))
+    jd = jax.jit(lambda x: moe_apply_dense(p, x, cfg))
+    js = jax.jit(lambda x: moe_apply_sorted(p, x, cfg))
+    ud = time_fn(jd, x)
+    us_ = time_fn(js, x)
+    out.append(row("moe/dense_e8k2", ud, "path=dense"))
+    out.append(row("moe/sorted_e8k2", us_,
+                   f"path=flims_sorted;speedup={ud / us_:.2f}"))
+    return out

@@ -1,0 +1,26 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus section comments).
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig14_w_sweep, fig15_full_sort, kernel_merge,
+                            merge_tree_bench, moe_dispatch, skew_balance,
+                            table2_comparators)
+    print("name,us_per_call,derived")
+    for mod, label in ((table2_comparators, "Table 2 (comparator counts)"),
+                       (fig14_w_sweep, "Fig 14 (throughput vs w)"),
+                       (fig15_full_sort, "Fig 15 (complete sort)"),
+                       (skew_balance, "S4.1 (skewness optimisation)"),
+                       (merge_tree_bench, "S2.1 (parallel merge tree)"),
+                       (kernel_merge, "Pallas kernels (interpret)"),
+                       (moe_dispatch, "MoE dispatch (framework feature)")):
+        print(f"# --- {label} ---")
+        for line in mod.run():
+            print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

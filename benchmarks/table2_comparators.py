@@ -1,0 +1,26 @@
+"""Paper Table 2: comparator counts per merger design and w.
+
+Analytic formulas (validated against jaxpr op counts in tests/test_table2.py).
+Derived column: FLiMS advantage factor vs each design.
+"""
+from repro.core import (comparators_basic, comparators_ehms,
+                        comparators_flims, comparators_mms, comparators_pmt,
+                        comparators_wms, pipeline_depth)
+from benchmarks.common import row
+
+
+def run():
+    out = []
+    for w in (8, 32, 128, 512):
+        f = comparators_flims(w)
+        for name, fn in (("flims", comparators_flims),
+                         ("basic", comparators_basic),
+                         ("pmt", comparators_pmt),
+                         ("mms", comparators_mms),
+                         ("wms", comparators_wms),
+                         ("ehms", comparators_ehms)):
+            c = fn(w)
+            out.append(row(f"table2/{name}/w{w}", 0.0,
+                           f"comparators={c};flims_x={c / f:.2f};"
+                           f"depth={pipeline_depth(name if name != 'basic' else 'basic', w)}"))
+    return out

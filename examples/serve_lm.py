@@ -1,0 +1,11 @@
+"""Batched serving example: prefill + decode with FLiMS top-k sampling.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.configs import get_config
+from repro.launch.serve import serve
+
+cfg = get_config("qwen3_1p7b").reduced()
+toks, dt = serve(cfg, batch=4, prompt_len=8, gen=16, use_flims_topk=True)
+print(f"generated {toks.shape[0]}x{toks.shape[1]} tokens in {dt:.2f}s")
+print(toks)

@@ -1,0 +1,36 @@
+"""Architecture registry: one module per assigned architecture."""
+from __future__ import annotations
+
+from importlib import import_module
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "zamba2_2p7b", "gemma2_27b", "qwen3_1p7b", "gemma2_9b", "qwen1p5_110b",
+    "mixtral_8x22b", "moonshot_v1_16b_a3b", "internvl2_76b", "xlstm_1p3b",
+    "whisper_large_v3",
+]
+
+_ALIAS = {
+    "zamba2-2.7b": "zamba2_2p7b",
+    "gemma2-27b": "gemma2_27b",
+    "qwen3-1.7b": "qwen3_1p7b",
+    "gemma2-9b": "gemma2_9b",
+    "qwen1.5-110b": "qwen1p5_110b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "internvl2-76b": "internvl2_76b",
+    "xlstm-1.3b": "xlstm_1p3b",
+    "whisper-large-v3": "whisper_large_v3",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    mod_name = _ALIAS.get(name, name)
+    mod = import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

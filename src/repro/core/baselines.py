@@ -1,0 +1,132 @@
+"""The paper's comparison set (§2.2, §6, Table 2), implemented functionally.
+
+These are the mergers FLiMS is evaluated against. Each is a faithful
+*dataflow* port (what gets compared/kept per cycle), so the op-count relations
+of Table 2 hold in the jaxprs (verified in benchmarks/table2_comparators.py):
+
+- ``basic_merge``  — Chhugani/Casper (fig. 4): scalar head compare, dequeue a
+  whole w-row from the winning list, full 2w→2w bitonic merge with the carry,
+  emit top w, feed back bottom w. Comparators: w + w·log2(w).
+- ``mms_merge``    — MMS/VMS (fig. 6): same dequeue rule, but TWO 2w→w partial
+  mergers (one for the output top-w, one to re-sort the leftover bottom-w)
+  plus one selector comparator. Comparators: 2w + w·log2(w) + 1.
+- ``wms_merge``    — WMS (fig. 7/11): single 3w→w pruned merger over
+  [leftovers(2w), new row(w)]. Comparators: 3w + (w/2)·log2(w).
+
+All mergers here produce identical output to FLiMS; they differ in work per
+cycle — which is the paper's point.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.butterfly import butterfly_sort, bitonic_merge_full
+from repro.core.flims import sentinel_for, _pad_to, _cdiv
+
+
+def _prep(a, b, w):
+    n_out = a.shape[0] + b.shape[0]
+    cycles = _cdiv(n_out, w)
+    a_p = _pad_to(a, (cycles + 2) * w)
+    b_p = _pad_to(b, (cycles + 2) * w)
+    return a_p, b_p, n_out, cycles
+
+
+@partial(jax.jit, static_argnames=("w",))
+def basic_merge(a: jnp.ndarray, b: jnp.ndarray, w: int = 32) -> jnp.ndarray:
+    """Chhugani-style merger (paper fig. 4). Descending."""
+    a_p, b_p, n_out, cycles = _prep(a, b, w)
+    if n_out == 0:
+        return jnp.zeros((0,), a.dtype)
+
+    def body(carry, _):
+        pA, pB, keep = carry
+        headA = a_p[pA]
+        headB = b_p[pB]
+        take_a = headA > headB                      # single compare (fig. 4)
+        row = jnp.where(take_a, lax.dynamic_slice(a_p, (pA,), (w,)),
+                        lax.dynamic_slice(b_p, (pB,), (w,)))
+        pA = pA + jnp.where(take_a, w, 0)
+        pB = pB + jnp.where(take_a, 0, w)
+        both = jnp.concatenate([keep, row[::-1]])   # bitonic 2w sequence
+        merged = bitonic_merge_full(both)           # FULL 2w→2w merger
+        return (pA, pB, merged[w:]), merged[:w]
+
+    init = (jnp.int32(w), jnp.int32(0),
+            lax.dynamic_slice(a_p, (0,), (w,)))     # prime carry with A row 0
+    (_, _, keep), chunks = lax.scan(body, init, None, length=cycles)
+    out = jnp.concatenate([chunks.reshape(-1), keep])
+    return out[:n_out]
+
+
+@partial(jax.jit, static_argnames=("w",))
+def mms_merge(a: jnp.ndarray, b: jnp.ndarray, w: int = 32) -> jnp.ndarray:
+    """MMS/VMS-style merger (paper fig. 6): two 2w→w partial mergers."""
+    a_p, b_p, n_out, cycles = _prep(a, b, w)
+    if n_out == 0:
+        return jnp.zeros((0,), a.dtype)
+
+    def body(carry, _):
+        pA, pB, keep = carry                        # keep: w leftovers, desc
+        take_a = a_p[pA] > b_p[pB]                  # selector comparator
+        row = jnp.where(take_a, lax.dynamic_slice(a_p, (pA,), (w,)),
+                        lax.dynamic_slice(b_p, (pB,), (w,)))
+        pA = pA + jnp.where(take_a, w, 0)
+        pB = pB + jnp.where(take_a, 0, w)
+        rr = row[::-1]
+        hi = butterfly_sort(jnp.maximum(keep, rr))  # partial merger #1 (out)
+        lo = butterfly_sort(jnp.minimum(keep, rr))  # partial merger #2 (keep)
+        return (pA, pB, lo), hi
+
+    init = (jnp.int32(w), jnp.int32(0), lax.dynamic_slice(a_p, (0,), (w,)))
+    (_, _, keep), chunks = lax.scan(body, init, None, length=cycles)
+    out = jnp.concatenate([chunks.reshape(-1), keep])
+    return out[:n_out]
+
+
+@partial(jax.jit, static_argnames=("w",))
+def wms_merge(a: jnp.ndarray, b: jnp.ndarray, w: int = 32) -> jnp.ndarray:
+    """WMS-style merger (paper fig. 7): one 3w→w merger over leftovers+row.
+
+    Functional port: the 2w leftovers stay sorted; the 3w candidate set
+    [leftovers, new row] yields top-w output and 2w new leftovers.
+    """
+    a_p, b_p, n_out, cycles = _prep(a, b, w)
+    if n_out == 0:
+        return jnp.zeros((0,), a.dtype)
+
+    def merge_2w_w(L2, row):
+        """L2: 2w desc; row: w desc → (top w, new 2w leftovers)."""
+        # half-clean the (2w) leftovers against [row, sentinels] reversed:
+        rowp = jnp.concatenate([row, jnp.full((w,), sentinel_for(row.dtype),
+                                              row.dtype)])
+        hi = jnp.maximum(L2, rowp[::-1])
+        lo = jnp.minimum(L2, rowp[::-1])
+        hi = butterfly_sort(hi)                     # 2w butterfly
+        lo = butterfly_sort(lo)
+        # top w = hi[:w]; leftovers = merge(hi[w:], lo[:w]) — one more stage
+        rest = butterfly_sort(
+            jnp.concatenate([hi[w:], lo[:w][::-1]]))
+        return hi[:w], rest
+
+    def body(carry, _):
+        pA, pB, L2 = carry
+        take_a = a_p[pA] > b_p[pB]
+        row = jnp.where(take_a, lax.dynamic_slice(a_p, (pA,), (w,)),
+                        lax.dynamic_slice(b_p, (pB,), (w,)))
+        pA = pA + jnp.where(take_a, w, 0)
+        pB = pB + jnp.where(take_a, 0, w)
+        top, L2 = merge_2w_w(L2, row)
+        return (pA, pB, L2), top
+
+    L0 = butterfly_sort(jnp.concatenate(
+        [lax.dynamic_slice(a_p, (0,), (w,)),
+         lax.dynamic_slice(b_p, (0,), (w,))[::-1]]))
+    init = (jnp.int32(w), jnp.int32(w), L0)
+    (_, _, L2), chunks = lax.scan(body, init, None, length=cycles)
+    out = jnp.concatenate([chunks.reshape(-1), L2])
+    return out[:n_out]

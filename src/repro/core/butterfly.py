@@ -1,0 +1,191 @@
+"""Butterfly CAS network and bitonic sorting networks (paper fig. 3 / 9).
+
+All networks operate on the trailing axis and are built from *static* stages
+(reshape + min/max), which map onto TPU VPU lane operations with no dynamic
+shuffles. Descending order is the paper's convention and ours.
+
+A "CAS stage at distance d" compares elements i and i+d inside each 2d-block
+and places the max first (descending). The butterfly network = stages at
+distances w/2, w/4, ..., 1; it sorts any *bitonic* sequence (including rotated
+bitonic sequences — the FLiMS enabling fact, paper §5.1(2)).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Compare = Callable[[Any, Any], Any]  # (x, y) -> bool mask "x goes first"
+
+
+def _default_gt(x, y):
+    """Descending comparator on plain arrays."""
+    return x > y
+
+
+def cas_stage(x, d: int, *, compare: Compare = _default_gt):
+    """One compare-and-swap stage at distance ``d`` on the trailing axis.
+
+    Works on a pytree of arrays with identical trailing shape; ``compare``
+    receives the pytree leaves' paired views and must return a boolean mask.
+    For plain arrays the default descending comparator is used.
+    """
+    def split(a):
+        w = a.shape[-1]
+        a2 = a.reshape(a.shape[:-1] + (w // (2 * d), 2, d))
+        return a2[..., 0, :], a2[..., 1, :]
+
+    def join(hi, lo):
+        a2 = jnp.stack([hi, lo], axis=-2)
+        return a2.reshape(a2.shape[:-3] + (a2.shape[-3] * 2 * d,))
+
+    if isinstance(x, jnp.ndarray) or not isinstance(x, (tuple, dict, list)):
+        top, bot = split(x)
+        m = compare(top, bot)
+        hi = jnp.where(m, top, bot)
+        lo = jnp.where(m, bot, top)
+        return join(hi, lo)
+
+    # pytree (key/value) version: comparator decides from the tree of pairs
+    tops = jax.tree.map(split, x)
+    top = jax.tree.map(lambda p: p[0], tops, is_leaf=lambda p: isinstance(p, tuple))
+    bot = jax.tree.map(lambda p: p[1], tops, is_leaf=lambda p: isinstance(p, tuple))
+    m = compare(top, bot)
+    hi = jax.tree.map(lambda t, b: jnp.where(m, t, b), top, bot)
+    lo = jax.tree.map(lambda t, b: jnp.where(m, b, t), top, bot)
+    return jax.tree.map(join, hi, lo)
+
+
+def butterfly_sort(x, *, compare: Compare = _default_gt):
+    """Sort a (rotated-)bitonic sequence on the trailing axis, descending.
+
+    This is the FLiMS CAS network (paper fig. 9 minus the selector stage):
+    log2(w) stages at distances w/2 .. 1. Only correct for bitonic input.
+    """
+    w = jax.tree.leaves(x)[0].shape[-1]
+    assert w & (w - 1) == 0, f"w must be a power of two, got {w}"
+    d = w // 2
+    while d >= 1:
+        x = cas_stage(x, d, compare=compare)
+        d //= 2
+    return x
+
+
+def bitonic_merge_full(x, *, compare: Compare = _default_gt):
+    """Full 2w->2w bitonic merger (paper fig. 3): butterfly over the whole 2w.
+
+    Input: concatenation [A, reverse(B)] of two descending lists = bitonic.
+    Output: all 2w elements sorted descending. Used by the Chhugani/fig.4
+    baseline merger.
+    """
+    return butterfly_sort(x, compare=compare)
+
+
+def bitonic_sort(x, *, compare: Compare = _default_gt):
+    """Full bitonic sorter on the trailing axis (descending), any input.
+
+    log2(w)*(log2(w)+1)/2 stages. Used for sort-in-chunks (paper §8.2).
+    Trailing dim must be a power of two (pad with -inf beforehand).
+    """
+    w = jax.tree.leaves(x)[0].shape[-1]
+    assert w & (w - 1) == 0, f"w must be a power of two, got {w}"
+    k = 2
+    while k <= w:
+        # bitonic merge of size-k blocks with alternating directions.
+        # Direction alternation implemented by flipping comparison on odd blocks.
+        half = k // 2
+        x = _cas_stage_alternating(x, half, k, compare)
+        d = half // 2
+        while d >= 1:
+            x = _cas_stage_alternating(x, d, k, compare)
+            d //= 2
+        k *= 2
+    return x
+
+
+def _cas_stage_alternating(x, d: int, block: int, compare: Compare):
+    """CAS stage at distance d where direction alternates every ``block``."""
+    leaves = jax.tree.leaves(x)
+    w = leaves[0].shape[-1]
+    idx = jnp.arange(w // 2)  # index of each comparator's "first" element group
+    # comparator c handles elements (i, i+d): enumerate first-elements
+    first = (jnp.arange(w).reshape(w // (2 * d), 2, d)[:, 0, :]).reshape(-1)
+    ascending_block = (first // block) % 2 == 1  # odd blocks sort ascending
+
+    def split(a):
+        a2 = a.reshape(a.shape[:-1] + (w // (2 * d), 2, d))
+        return a2[..., 0, :], a2[..., 1, :]
+
+    def join(hi, lo):
+        a2 = jnp.stack([hi, lo], axis=-2)
+        return a2.reshape(a2.shape[:-3] + (w,))
+
+    flip = ascending_block.reshape(w // (2 * d), d)
+
+    if isinstance(x, jnp.ndarray) or not isinstance(x, (tuple, dict, list)):
+        top, bot = split(x)
+        m = compare(top, bot) ^ flip
+        return join(jnp.where(m, top, bot), jnp.where(m, bot, top))
+
+    tops = jax.tree.map(split, x)
+    top = jax.tree.map(lambda p: p[0], tops, is_leaf=lambda p: isinstance(p, tuple))
+    bot = jax.tree.map(lambda p: p[1], tops, is_leaf=lambda p: isinstance(p, tuple))
+    m = compare(top, bot) ^ flip
+    hi = jax.tree.map(lambda t, b: jnp.where(m, t, b), top, bot)
+    lo = jax.tree.map(lambda t, b: jnp.where(m, b, t), top, bot)
+    return jax.tree.map(join, hi, lo)
+
+
+# --- comparator-count formulas (paper Table 2) -------------------------------
+
+def comparators_flims(w: int) -> int:
+    """FLiMS: w MAX units + (w/2)*log2(w) CAS units."""
+    return w + (w // 2) * int(math.log2(w))
+
+
+def comparators_flimsj(w: int) -> int:
+    """FLiMSj: same network as FLiMS (extra logic is muxes, not comparators)."""
+    return comparators_flims(w)
+
+
+def comparators_basic(w: int) -> int:
+    """Chhugani/Casper fig.4: full 2w-to-2w bitonic merger: w + w*log2(w)."""
+    return w + w * int(math.log2(w))
+
+
+def comparators_pmt(w: int) -> int:
+    """PMT merger: one 2w-to-w partial merger: w + (w/2)*log2(w)."""
+    return w + (w // 2) * int(math.log2(w))
+
+
+def comparators_mms(w: int) -> int:
+    """MMS/VMS: two 2w-to-w partial mergers + 1 selector comparator."""
+    return 2 * w + w * int(math.log2(w)) + 1
+
+
+def comparators_wms(w: int) -> int:
+    """WMS: one 3w-to-w pruned odd-even merger: 3w + (w/2)*log2(w)."""
+    return 3 * w + (w // 2) * int(math.log2(w))
+
+
+def comparators_ehms(w: int) -> int:
+    """EHMS: 2.5w-to-w pruned odd-even merger: 5w/2 + (w/2)*log2(w) + 2."""
+    return (5 * w) // 2 + (w // 2) * int(math.log2(w)) + 2
+
+
+def pipeline_depth(design: str, w: int) -> int:
+    """Latency column of Table 2."""
+    lg = int(math.log2(w))
+    return {
+        "basic": lg + 2,
+        "pmt": 2 * lg + 1,
+        "mms": 2 * lg + 3,
+        "vms": 2 * lg + 3,
+        "wms": lg + 3,
+        "ehms": lg + 3,
+        "flims": lg + 1,
+        "flimsj": lg + 2,
+    }[design]

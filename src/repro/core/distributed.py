@@ -1,0 +1,91 @@
+"""Distributed sorting across a device mesh (paper §8.2, scaled out).
+
+The paper parallelises FLiMS mergesort across CPU threads: sort-in-chunks on
+all cores, then parallel merge passes. Across a TPU pod the same structure
+becomes a *sample sort*:
+
+  1. every device FLiMS-sorts its local shard             (compute-bound)
+  2. regular sampling -> all_gather(P·P samples) -> global splitters
+  3. bucket partition via searchsorted + one all_to_all   (collective-bound)
+  4. every device PMT-merges the P sorted runs it received (paper fig. 1)
+
+Output: device p holds the p-th descending value range, i.e. the mesh-order
+concatenation is globally sorted. Buckets are sentinel-padded to a fixed cap
+(collectives need static shapes); `counts` reports true sizes and `overflow`
+flags cap overruns (re-run with a larger cap — the launcher does this).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.flims import sentinel_for
+from repro.core.merge_tree import pmt_merge
+from repro.core.mergesort import flims_sort, _next_pow2
+
+
+class ShardedSort(NamedTuple):
+    values: jnp.ndarray   # (P * cap,) per device, sentinel-padded, descending
+    count: jnp.ndarray    # () valid prefix length per device
+    overflow: jnp.ndarray # () bool: some bucket exceeded the cap
+
+
+def _local_pass(xl: jnp.ndarray, axis_name: str, n_dev: int, cap: int,
+                w: int) -> ShardedSort:
+    n_local = xl.shape[0]
+    loc = flims_sort(xl, w=w)                        # descending local sort
+    # --- splitters from regular sampling -----------------------------------
+    step = max(n_local // n_dev, 1)
+    samples = loc[::step][:n_dev]
+    allsmp = lax.all_gather(samples, axis_name).reshape(-1)      # (P*P,)
+    allsmp = flims_sort(allsmp, w=min(w, _next_pow2(allsmp.shape[0])))
+    splitters = allsmp[::n_dev][1:n_dev]                          # (P-1,) desc
+    # --- bucket boundaries: b_p = #elements strictly greater than s_p ------
+    asc = loc[::-1]
+    b = n_local - jnp.searchsorted(asc, splitters, side="left")
+    bounds = jnp.concatenate([jnp.zeros((1,), b.dtype), b,
+                              jnp.full((1,), n_local, b.dtype)])  # (P+1,)
+    sizes = bounds[1:] - bounds[:-1]
+    overflow = jnp.any(sizes > cap)
+    # --- gather each bucket into a fixed-cap row ----------------------------
+    sent = sentinel_for(loc.dtype)
+    pos = bounds[:-1][:, None] + jnp.arange(cap)[None, :]         # (P, cap)
+    valid = jnp.arange(cap)[None, :] < jnp.minimum(sizes, cap)[:, None]
+    send = jnp.where(valid, loc[jnp.clip(pos, 0, n_local - 1)], sent)
+    # --- exchange -----------------------------------------------------------
+    recv = lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0,
+                          tiled=True)                             # (P, cap)
+    cnt = lax.all_to_all(jnp.minimum(sizes, cap), axis_name,
+                         split_axis=0, concat_axis=0, tiled=True)
+    # --- k-way FLiMS merge of the received runs -----------------------------
+    k_pad = _next_pow2(recv.shape[0])
+    if k_pad != recv.shape[0]:
+        recv = jnp.concatenate(
+            [recv, jnp.full((k_pad - recv.shape[0], cap), sent, loc.dtype)])
+    merged = pmt_merge(recv, w=min(w, _next_pow2(cap)))
+    any_ovf = lax.pmax(overflow.astype(jnp.int32), axis_name)
+    return ShardedSort(merged, jnp.sum(cnt).reshape(1),
+                       any_ovf.astype(bool).reshape(1))
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "w", "cap_factor"))
+def sample_sort(x: jnp.ndarray, mesh, axis: str = "data", w: int = 32,
+                cap_factor: int = 4) -> ShardedSort:
+    """Sort a 1-D array sharded over ``axis`` of ``mesh``. Descending.
+
+    Returns per-device padded runs; `values` with spec P(axis) concatenates to
+    the global descending order.
+    """
+    n_dev = mesh.shape[axis]
+    n_local = x.shape[0] // n_dev
+    cap = min(n_local, cap_factor * max(n_local // n_dev, 1))
+    fn = partial(_local_pass, axis_name=axis, n_dev=n_dev, cap=cap, w=w)
+    return jax.shard_map(
+        fn, mesh=mesh, in_specs=P(axis),
+        out_specs=ShardedSort(P(axis), P(axis), P(axis)),
+        check_vma=False)(x)

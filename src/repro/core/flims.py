@@ -1,0 +1,251 @@
+"""FLiMS: Fast Lightweight 2-way Merge Sorter (paper §3-§5), in JAX.
+
+Two formulations, both descending (the paper's convention):
+
+1. ``flims_merge_ref`` — *sorted-space* formulation: scalar pointers into each
+   list, per-iteration unaligned loads. Mathematically identical selector
+   (paper §5.1 shows the banked comparisons are a lane-rotation of these).
+   Serves as the readable reference and the Pallas-kernel oracle.
+
+2. ``flims_merge_banked`` — *banked/windowed* formulation that mirrors the
+   hardware: inputs live in round-robin banks (rows of width ``w``); queue
+   heads are maintained in natural rotated positions via two-row sliding
+   windows ``W ∈ (2, w)`` plus rotation offsets ``lA, lB`` with the FLiMS
+   invariant ``(lA + lB) mod w == 0``. Per iteration the only data movement is
+   one static reverse, the butterfly's static permutes, and at most one
+   row-*aligned* load per input — no barrel shifters (PMT), no second merger
+   (MMS/VMS), no 3w merger (WMS). This realises the paper's FLiMSj-style
+   whole-row dequeue (§4.3), which the paper itself prefers for SIMD (§8.1).
+
+Variants (paper §4):
+- tie='b'        plain FLiMS (algorithm 1: strict ``>``, ties taken from B),
+- tie='skew'     skewness optimisation (algorithm 2: oscillating ``dir`` bit),
+- ``flims_merge_kv_stable`` stable merge with payloads (algorithm 3,
+  generalised: instead of packing source/order/port bits into the MSB we carry
+  (key, src, rank) through the selector and CAS network — the paper notes the
+  bit-packing "emulates appending the original input order to the MSB", which
+  is exactly what the rank field does exactly).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.butterfly import butterfly_sort
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def sentinel_for(dtype) -> Any:
+    """Value that sorts last in descending order (never strictly wins)."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).min, dtype)
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    pad = n - x.shape[0]
+    return jnp.pad(x, (0, pad), constant_values=sentinel_for(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# sorted-space reference (oracle)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("w",))
+def flims_merge_ref(a: jnp.ndarray, b: jnp.ndarray, w: int = 128) -> jnp.ndarray:
+    """Merge two descending-sorted 1-D arrays; returns descending merged array.
+
+    Per iteration (= hardware cycle): load the next ``w`` candidates of each
+    list, run the MAX selector on (sA, reverse(sB)) — the half-cleaner of a
+    2w bitonic partial merger — and butterfly-sort the resulting bitonic
+    vector into the next w-sized output chunk (paper fig. 9).
+    """
+    assert a.ndim == b.ndim == 1
+    assert w & (w - 1) == 0
+    n_out = a.shape[0] + b.shape[0]
+    if n_out == 0:
+        return jnp.zeros((0,), a.dtype)
+    cycles = _cdiv(n_out, w)
+    # Pointers never pass cycles*w; pad so every w-slice is in range.
+    a_p = _pad_to(a, cycles * w + w)
+    b_p = _pad_to(b, cycles * w + w)
+
+    def body(carry, _):
+        pA, pB = carry
+        sA = lax.dynamic_slice(a_p, (pA,), (w,))
+        sBr = lax.dynamic_slice(b_p, (pB,), (w,))[::-1]
+        mask = sA > sBr                      # ties prefer B (algorithm 1)
+        k = jnp.sum(mask)
+        chunk = butterfly_sort(jnp.maximum(sA, sBr))
+        return (pA + k, pB + (w - k)), chunk
+
+    (_, _), chunks = lax.scan(body, (jnp.int32(0), jnp.int32(0)), None,
+                              length=cycles)
+    return chunks.reshape(-1)[:n_out]
+
+
+# --------------------------------------------------------------------------
+# banked / windowed formulation (hardware-shaped; FLiMSj-style row dequeue)
+# --------------------------------------------------------------------------
+
+class MergeStats(NamedTuple):
+    merged: jnp.ndarray
+    k_per_cycle: jnp.ndarray   # elements dequeued from A on each cycle
+
+
+@partial(jax.jit, static_argnames=("w", "tie", "with_stats"))
+def flims_merge_banked(a: jnp.ndarray, b: jnp.ndarray, w: int = 128,
+                       tie: str = "b", with_stats: bool = False):
+    """Banked FLiMS merge (descending). See module docstring.
+
+    tie='b'    : algorithm 1 (plain; ties dequeue from B).
+    tie='skew' : algorithm 2 (oscillating dir bit balances dequeue rates).
+    """
+    assert a.ndim == b.ndim == 1
+    assert w & (w - 1) == 0
+    assert tie in ("b", "skew")
+    n_out = a.shape[0] + b.shape[0]
+    if n_out == 0:
+        out = jnp.zeros((0,), a.dtype)
+        return MergeStats(out, jnp.zeros((0,), jnp.int32)) if with_stats else out
+    cycles = _cdiv(n_out, w)
+
+    def rows_of(x):
+        r = _cdiv(x.shape[0], w) + 2          # +2 sentinel rows for the window
+        return _pad_to(x, r * w).reshape(r, w)
+
+    ra, rb = rows_of(a), rows_of(b)
+    iota = jnp.arange(w)
+
+    def heads(W, l):
+        # banks < l are one row ahead (window row 1), the rest at window row 0
+        return jnp.where(iota < l, W[1], W[0])
+
+    def advance(W, rows, l, r, consumed):
+        l2 = l + consumed
+        shift = l2 >= w
+        nxt = rows[jnp.minimum(r, rows.shape[0] - 1)]
+        W = jnp.where(shift, jnp.stack([W[1], nxt]), W)
+        return W, jnp.where(shift, l2 - w, l2), r + shift.astype(jnp.int32)
+
+    def body(carry, _):
+        WA, WB, lA, lB, rA, rB, dirb = carry
+        cA = heads(WA, lA)
+        cB = heads(WB, lB)
+        cBr = cB[::-1]                         # MAX_i pairs a_i with b_{w-1-i}
+        if tie == "b":
+            mask = cA > cBr
+        else:  # skew: {cA,dir} > {cB,!dir}  → on ties take A iff dir==1
+            mask = (cA > cBr) | ((cA == cBr) & dirb)
+        in_vec = jnp.where(mask, cA, cBr)      # rotated bitonic (proof §5.1-2)
+        chunk = butterfly_sort(in_vec)
+        k = jnp.sum(mask.astype(jnp.int32))
+        dirb = ~mask                           # alg.2: took A → dir=0
+        WA, lA, rA = advance(WA, ra, lA, rA, k)
+        WB, lB, rB = advance(WB, rb, lB, rB, w - k)
+        return (WA, WB, lA, lB, rA, rB, dirb), (chunk, k)
+
+    init = (ra[:2], rb[:2], jnp.int32(0), jnp.int32(0),
+            jnp.int32(2), jnp.int32(2), jnp.zeros((w,), bool))
+    _, (chunks, ks) = lax.scan(body, init, None, length=cycles)
+    merged = chunks.reshape(-1)[:n_out]
+    if with_stats:
+        return MergeStats(merged, ks)
+    return merged
+
+
+# --------------------------------------------------------------------------
+# stable key/value merge (paper algorithm 3, generalised)
+# --------------------------------------------------------------------------
+
+def _stable_first(x, y):
+    """True where x must precede y: key desc, then src asc, then rank asc."""
+    kx, sx, rx = x["key"], x["src"], x["rank"]
+    ky, sy, ry = y["key"], y["src"], y["rank"]
+    return (kx > ky) | ((kx == ky) & ((sx < sy) | ((sx == sy) & (rx < ry))))
+
+
+@partial(jax.jit, static_argnames=("w",))
+def flims_merge_kv_stable(keys_a, vals_a, keys_b, vals_b, w: int = 128):
+    """Stable descending merge of (key, value) lists; A's duplicates first.
+
+    vals_* is a pytree of (n,)-shaped arrays carried through the network.
+    Returns (merged_keys, merged_vals).
+    """
+    assert keys_a.ndim == keys_b.ndim == 1
+    nA, nB = keys_a.shape[0], keys_b.shape[0]
+    n_out = nA + nB
+    if n_out == 0:
+        return keys_a, vals_a
+    cycles = _cdiv(n_out, w)
+    npad = cycles * w + w
+    big = jnp.int32(npad + 1)
+
+    def prep(keys, vals, src):
+        k = _pad_to(keys, npad)
+        v = jax.tree.map(lambda x: jnp.pad(x, (0, npad - x.shape[0])), vals)
+        s = jnp.full((npad,), src, jnp.int32)
+        r = jnp.where(jnp.arange(npad) < keys.shape[0],
+                      jnp.arange(npad, dtype=jnp.int32), big)
+        return k, v, s, r
+
+    ka, va, sa, rka = prep(keys_a, vals_a, 0)
+    kb, vb, sb, rkb = prep(keys_b, vals_b, 1)
+
+    def slice_at(k, v, s, r, p, rev):
+        out = {"key": lax.dynamic_slice(k, (p,), (w,)),
+               "src": lax.dynamic_slice(s, (p,), (w,)),
+               "rank": lax.dynamic_slice(r, (p,), (w,)),
+               "val": jax.tree.map(
+                   lambda x: lax.dynamic_slice(x, (p,), (w,)), v)}
+        if rev:
+            out = jax.tree.map(lambda x: x[::-1], out)
+        return out
+
+    def body(carry, _):
+        pA, pB = carry
+        A = slice_at(ka, va, sa, rka, pA, False)
+        B = slice_at(kb, vb, sb, rkb, pB, True)
+        take_a = _stable_first(A, B)           # selector with stable priority
+        k = jnp.sum(take_a.astype(jnp.int32))
+        sel = jax.tree.map(lambda x, y: jnp.where(take_a, x, y), A, B)
+        chunk = butterfly_sort(sel, compare=_stable_first)
+        return (pA + k, pB + (w - k)), chunk
+
+    (_, _), chunks = lax.scan(body, (jnp.int32(0), jnp.int32(0)), None,
+                              length=cycles)
+    flat = jax.tree.map(
+        lambda x: x.reshape((-1,) + x.shape[2:])[:n_out], chunks)
+    return flat["key"], flat["val"]
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+
+def flims_merge(a, b, *, w: int = 128, descending: bool = True,
+                variant: str = "banked", tie: str = "b"):
+    """Merge two sorted 1-D arrays with FLiMS.
+
+    variant: 'banked' (production, FLiMSj-style row dequeues) or 'ref'
+    (sorted-space reference). ``descending=False`` merges ascending inputs.
+    """
+    if not descending:
+        out = flims_merge(a[::-1], b[::-1], w=w, descending=True,
+                          variant=variant, tie=tie)
+        return out[::-1]
+    if variant == "ref":
+        return flims_merge_ref(a, b, w)
+    return flims_merge_banked(a, b, w, tie=tie)

@@ -1,0 +1,66 @@
+"""Parallel merge trees (paper §2.1, figs. 1-2): PMT and HPMT in JAX.
+
+A PMT merges 2^L sorted lists through a binary tree of FLiMS 2-way mergers.
+An HPMT feeds a PMT from K-leaf single-rate mergers to merge many lists in a
+single pass while keeping the output rate high.
+
+On TPU the "tree" is a reduction schedule, not physical pipelines: each level
+is one vmapped FLiMS merge over the surviving pairs (all pairs of a level are
+independent, exactly like the independent merger blocks of fig. 1).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flims import flims_merge_ref, _pad_to, sentinel_for
+
+
+@partial(jax.jit, static_argnames=("w",))
+def pmt_merge(lists: jnp.ndarray, w: int = 32) -> jnp.ndarray:
+    """Merge ``lists`` of shape (K, n) — K descending rows, K a power of 2.
+
+    Returns the (K*n,) merged descending array. Each tree level is a vmapped
+    FLiMS merge (the paper's rate-doubling levels).
+    """
+    K = lists.shape[0]
+    assert K & (K - 1) == 0, "K must be a power of two"
+    rows = lists
+    merge = jax.vmap(lambda a, b: flims_merge_ref(a, b, w))
+    while rows.shape[0] > 1:
+        rows = merge(rows[0::2], rows[1::2])
+    return rows[0]
+
+
+def merge_k(arrays: Sequence[jnp.ndarray], w: int = 32) -> jnp.ndarray:
+    """Merge K descending arrays of arbitrary (unequal) lengths: HPMT-style.
+
+    Python-level binary tree over jitted 2-way merges (each distinct shape
+    pair compiles once; the tree has ceil(log2 K) levels like fig. 1).
+    """
+    arrays = [jnp.asarray(a) for a in arrays if a.shape[0] > 0]
+    if not arrays:
+        return jnp.zeros((0,), jnp.float32)
+    while len(arrays) > 1:
+        nxt = []
+        for i in range(0, len(arrays) - 1, 2):
+            nxt.append(flims_merge_ref(arrays[i], arrays[i + 1], w))
+        if len(arrays) % 2:
+            nxt.append(arrays[-1])
+        arrays = nxt
+    return arrays[0]
+
+
+@partial(jax.jit, static_argnames=("w", "valid_is_count",))
+def pmt_merge_padded(lists: jnp.ndarray, counts: jnp.ndarray, w: int = 32,
+                     valid_is_count: bool = True) -> jnp.ndarray:
+    """Merge K sentinel-padded descending rows with per-row valid ``counts``.
+
+    Sentinels sort last, so the merged prefix of length sum(counts) is the
+    true merge — used by the distributed sample-sort exchange.
+    """
+    del counts, valid_is_count  # sentinels already sort last
+    return pmt_merge(lists, w)

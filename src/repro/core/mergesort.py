@@ -1,0 +1,102 @@
+"""FLiMS-based complete sorting (paper §8.2).
+
+Pipeline: bitonic sort-in-chunks (vectorised over rows) followed by
+log2(n/chunk) FLiMS merge passes (vmapped over the independent pairs of each
+pass) — exactly the paper's CPU scheme (sorted chunk size 512, then 2-way
+FLiMS merges), expressed in JAX.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.butterfly import bitonic_sort
+from repro.core.flims import (flims_merge_ref, flims_merge_kv_stable,
+                              sentinel_for, _pad_to)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def sort_chunks(x: jnp.ndarray, chunk: int = 512) -> jnp.ndarray:
+    """Bitonic-sort each row of x.reshape(-1, chunk), descending."""
+    return bitonic_sort(x.reshape(-1, chunk))
+
+
+@partial(jax.jit, static_argnames=("chunk", "w", "descending"))
+def flims_sort(x: jnp.ndarray, *, chunk: int = 512, w: int = 32,
+               descending: bool = True) -> jnp.ndarray:
+    """Full sort of a 1-D array via FLiMS merge sort. Returns same length."""
+    n = x.shape[0]
+    if n <= 1:
+        return x
+    chunk = min(chunk, _next_pow2(n))
+    w = min(w, chunk)
+    n_pad = _next_pow2(max(n, chunk))
+    xp = _pad_to(x, n_pad)
+    rows = sort_chunks(xp, chunk)                  # (m, chunk) descending rows
+    merge = jax.vmap(lambda a, b: flims_merge_ref(a, b, w))
+    while rows.shape[0] > 1:
+        a, b = rows[0::2], rows[1::2]
+        rows = merge(a, b)
+    out = rows[0, :n]
+    return out if descending else out[::-1]
+
+
+@partial(jax.jit, static_argnames=("chunk", "w", "descending"))
+def flims_argsort(keys: jnp.ndarray, *, chunk: int = 256, w: int = 32,
+                  descending: bool = True) -> jnp.ndarray:
+    """Stable argsort via key/value FLiMS merge sort (paper alg. 3 semantics).
+
+    Returns int32 permutation such that keys[perm] is sorted.
+    """
+    n = keys.shape[0]
+    if n <= 1:
+        return jnp.zeros((n,), jnp.int32)
+    if not descending:
+        # stable ascending = mirror of stable descending on the reversed input
+        perm_rev = _argsort_desc(keys=keys[::-1], chunk=chunk, w=w)
+        return (n - 1 - perm_rev)[::-1].astype(jnp.int32)
+    return _argsort_desc(keys=jnp.asarray(keys), chunk=chunk, w=w)
+
+
+def _argsort_desc(keys: jnp.ndarray, chunk: int, w: int) -> jnp.ndarray:
+    n = keys.shape[0]
+    chunk = min(chunk, _next_pow2(n))
+    w = min(w, chunk)
+    n_pad = _next_pow2(max(n, chunk))
+    kp = _pad_to(keys, n_pad)
+    idx = jnp.where(jnp.arange(n_pad) < n, jnp.arange(n_pad, dtype=jnp.int32),
+                    jnp.int32(n_pad))
+    # chunk-local stable sort: compound compare (key desc, rank asc)
+    rows = {"key": kp.reshape(-1, chunk), "rank": idx.reshape(-1, chunk)}
+
+    def cmp(x, y):
+        return (x["key"] > y["key"]) | ((x["key"] == y["key"]) &
+                                        (x["rank"] < y["rank"]))
+
+    rows = bitonic_sort(rows, compare=cmp)
+    k2, i2 = rows["key"], rows["rank"]
+
+    def merge_pair(ka, va, kb, vb):
+        mk, mv = flims_merge_kv_stable(ka, {"i": va}, kb, {"i": vb}, w)
+        return mk, mv["i"]
+
+    merge = jax.vmap(merge_pair)
+    while k2.shape[0] > 1:
+        k2, i2 = merge(k2[0::2], i2[0::2], k2[1::2], i2[1::2])
+    return i2[0, :n]
+
+
+def flims_sort_kv(keys: jnp.ndarray, values: jnp.ndarray, *,
+                  chunk: int = 256, w: int = 32, descending: bool = True):
+    """Stable key/value sort; values gathered by the argsort permutation."""
+    perm = flims_argsort(keys, chunk=chunk, w=w, descending=descending)
+    return keys[perm], values[perm]

@@ -1,0 +1,79 @@
+"""FLiMS-based top-k selection.
+
+Observation: one FLiMS "cycle" (MAX selector + butterfly, paper fig. 9) maps
+two descending k-lists to the sorted top-k of their union. Top-k of an
+arbitrary array is therefore: bitonic-sort rows of width c=k, then a binary
+tree reduction where every node is a *single* selector+butterfly — i.e. a
+parallel merge tree (paper §2.1) specialised to fixed-k streams.
+
+Used by the serving sampler (top-k / top-p) and MoE router.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.butterfly import bitonic_sort, butterfly_sort
+from repro.core.flims import sentinel_for
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _topk_node(a, b):
+    """Top-k (sorted desc) of two descending k-lists: one FLiMS cycle."""
+    br = jax.tree.map(lambda x: x[..., ::-1], b)
+    if isinstance(a, dict):
+        take_a = (a["key"] > br["key"]) | ((a["key"] == br["key"]) &
+                                           (a["rank"] < br["rank"]))
+        sel = jax.tree.map(lambda x, y: jnp.where(take_a, x, y), a, br)
+        cmp = lambda x, y: (x["key"] > y["key"]) | (
+            (x["key"] == y["key"]) & (x["rank"] < y["rank"]))
+        return butterfly_sort(sel, compare=cmp)
+    sel = jnp.maximum(a, br)
+    return butterfly_sort(sel)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def flims_topk(x: jnp.ndarray, k: int):
+    """Return (values, indices) of the k largest elements, values descending.
+
+    Deterministic: ties broken by lower index first (matches lax.top_k).
+    Works on any 1-D or batched (..., n) array over the trailing axis.
+    """
+    kk = _next_pow2(k)
+    n = x.shape[-1]
+    n_pad = max(_next_pow2(n), kk)
+    sent = sentinel_for(x.dtype)
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, n_pad - n)]
+    xp = jnp.pad(x, pad, constant_values=sent)
+    idx = jnp.arange(n_pad, dtype=jnp.int32)
+    idx = jnp.broadcast_to(idx, xp.shape)
+    rows = {"key": xp.reshape(x.shape[:-1] + (n_pad // kk, kk)),
+            "rank": idx.reshape(x.shape[:-1] + (n_pad // kk, kk))}
+    cmp = lambda a, b: (a["key"] > b["key"]) | ((a["key"] == b["key"]) &
+                                                (a["rank"] < b["rank"]))
+    rows = bitonic_sort(rows, compare=cmp)
+    # tree-reduce rows pairwise along axis -2
+    while rows["key"].shape[-2] > 1:
+        m = rows["key"].shape[-2]
+        if m % 2 == 1:  # carry odd row through
+            carry = jax.tree.map(lambda r: r[..., -1:, :], rows)
+            rows = jax.tree.map(lambda r: r[..., :-1, :], rows)
+        else:
+            carry = None
+        a = jax.tree.map(lambda r: r[..., 0::2, :], rows)
+        b = jax.tree.map(lambda r: r[..., 1::2, :], rows)
+        rows = _topk_node(a, b)
+        if carry is not None:
+            rows = jax.tree.map(lambda r, c: jnp.concatenate([r, c], axis=-2),
+                                rows, carry)
+    vals = rows["key"][..., 0, :k]
+    inds = rows["rank"][..., 0, :k]
+    return vals, inds

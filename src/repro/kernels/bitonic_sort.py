@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: in-register bitonic sort of fixed-width chunks.
+
+The sort-in-chunks stage of the paper's complete sorter (§8.2, chunk=512).
+Each grid step sorts a (rows_per_block, chunk) VMEM tile descending along the
+trailing axis with the full bitonic network — log2(c)(log2(c)+1)/2 stages of
+static reshapes + min/max, i.e. pure VPU work with no dynamic shuffles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitonic_rows_desc(x: jnp.ndarray) -> jnp.ndarray:
+    """Sort each row of (m, c) descending; c a power of two. Static network."""
+    m, c = x.shape
+    k = 2
+    while k <= c:
+        half = k // 2
+        d = half
+        while d >= 1:
+            y = x.reshape(m, c // (2 * d), 2, d)
+            top, bot = y[:, :, 0, :], y[:, :, 1, :]
+            first = (jnp.arange(c).reshape(c // (2 * d), 2, d)[:, 0, :])
+            asc = ((first // k) % 2 == 1)            # odd k-blocks ascend
+            mx = jnp.maximum(top, bot)
+            mn = jnp.minimum(top, bot)
+            hi = jnp.where(asc[None], mn, mx)
+            lo = jnp.where(asc[None], mx, mn)
+            x = jnp.stack([hi, lo], axis=2).reshape(m, c)
+            d //= 2
+        k *= 2
+    return x
+
+
+def _sort_kernel(x_ref, o_ref):
+    o_ref[...] = _bitonic_rows_desc(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
+def sort_chunks_pallas(x: jnp.ndarray, *, rows_per_block: int = 8,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Sort each row of a (m, c) array descending. c must be a power of 2."""
+    m, c = x.shape
+    assert c & (c - 1) == 0, "chunk width must be a power of two"
+    rb = min(rows_per_block, m)
+    while m % rb:
+        rb -= 1
+    grid = (m // rb,)
+    return pl.pallas_call(
+        _sort_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rb, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, c), x.dtype),
+        interpret=interpret,
+        name="bitonic_sort_chunks",
+    )(x)

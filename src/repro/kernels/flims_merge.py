@@ -1,0 +1,168 @@
+"""Pallas TPU kernel: merge-path partitioned FLiMS 2-way merge.
+
+Beyond-paper composition (DESIGN.md §2): the FPGA FLiMS is one physical
+pipeline; on TPU we shard the merge across a grid. A host-side vectorised
+co-rank binary search (merge path) finds, for every output chunk of size C,
+how many elements come from A vs B. Because C is a multiple of w, the FLiMS
+rotation invariant (lA + lB) ≡ 0 (mod w) holds at every partition boundary
+(aStart + bStart = g·C), so each grid step starts the banked FLiMS dataflow
+mid-rotation with *zero* realignment work.
+
+Memory behaviour per grid step (the TPU adaptation of the paper's banked
+BRAM): A and B arrive as row-major (rows, w) arrays; the BlockSpec brings in
+only the C/w + 2 rows each side can consume (``pl.Element`` indexing driven by
+the scalar-prefetched co-ranks), and the inner loop issues only row-aligned
+sublane loads — the lane-rotation that a naive vectorised merge would need is
+algebraically eliminated, exactly the paper's core trick.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.flims import sentinel_for
+
+
+def _butterfly_desc(v: jnp.ndarray) -> jnp.ndarray:
+    """Sort a (rotated-)bitonic w-vector descending: log2(w) CAS stages."""
+    w = v.shape[-1]
+    d = w // 2
+    while d >= 1:
+        x = v.reshape(w // (2 * d), 2, d)
+        hi = jnp.maximum(x[:, 0, :], x[:, 1, :])
+        lo = jnp.minimum(x[:, 0, :], x[:, 1, :])
+        v = jnp.stack([hi, lo], axis=1).reshape(w)
+        d //= 2
+    return v
+
+
+def _merge_kernel(arow0_ref, brow0_ref, la0_ref, lb0_ref,   # scalar prefetch
+                  a_ref, b_ref, out_ref, *, w: int, cycles: int):
+    g = pl.program_id(0)
+    lA0 = la0_ref[g]
+    lB0 = lb0_ref[g]
+    iota = lax.broadcasted_iota(jnp.int32, (w,), 0)
+    n_rows = a_ref.shape[0]
+
+    def heads(W0, W1, l):
+        return jnp.where(iota < l, W1, W0)
+
+    def body(t, carry):
+        WA0, WA1, WB0, WB1, lA, lB, rA, rB = carry
+        cA = heads(WA0, WA1, lA)
+        cBr = heads(WB0, WB1, lB)[::-1]     # MAX_i pairs a_i with b_{w-1-i}
+        mask = cA > cBr                     # algorithm 1: ties dequeue from B
+        chunk = _butterfly_desc(jnp.maximum(cA, cBr))
+        out_ref[0, pl.ds(t * w, w)] = chunk
+        k = jnp.sum(mask.astype(jnp.int32))
+
+        def advance(W0, W1, l, r, ref, consumed):
+            l2 = l + consumed
+            shift = l2 >= w
+            nxt = ref[jnp.minimum(r, n_rows - 1), :]
+            W0n = jnp.where(shift, W1, W0)
+            W1n = jnp.where(shift, nxt, W1)
+            return W0n, W1n, jnp.where(shift, l2 - w, l2), r + shift.astype(jnp.int32)
+
+        WA0, WA1, lA, rA = advance(WA0, WA1, lA, rA, a_ref, k)
+        WB0, WB1, lB, rB = advance(WB0, WB1, lB, rB, b_ref, w - k)
+        return WA0, WA1, WB0, WB1, lA, lB, rA, rB
+
+    init = (a_ref[0, :], a_ref[1, :], b_ref[0, :], b_ref[1, :],
+            lA0, lB0, jnp.int32(2), jnp.int32(2))
+    lax.fori_loop(0, cycles, body, init)
+
+
+def _corank(o, a, b):
+    """Vectorised merge-path co-rank: #A-elements among the top-``o`` of the
+    descending union, ties preferring B (FLiMS algorithm-1 order)."""
+    nA, nB = a.shape[0], b.shape[0]
+
+    def getA(i):  # a[i] with +inf below 0 and -inf beyond nA
+        v = a[jnp.clip(i, 0, nA - 1)]
+        big = jnp.asarray(jnp.inf if jnp.issubdtype(a.dtype, jnp.floating)
+                          else jnp.iinfo(a.dtype).max, a.dtype)
+        v = jnp.where(i < 0, big, v)
+        return jnp.where(i >= nA, sentinel_for(a.dtype), v)
+
+    def getB(i):
+        v = b[jnp.clip(i, 0, nB - 1)]
+        big = jnp.asarray(jnp.inf if jnp.issubdtype(b.dtype, jnp.floating)
+                          else jnp.iinfo(b.dtype).max, b.dtype)
+        v = jnp.where(i < 0, big, v)
+        return jnp.where(i >= nB, sentinel_for(b.dtype), v)
+
+    lo = jnp.maximum(0, o - nB)
+    hi = jnp.minimum(o, nA)
+
+    def step(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi + 1) // 2
+        # predicate: taking mid from A is consistent: a[mid-1] > b[o-mid]
+        ok = getA(mid - 1) > getB(o - mid)
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid - 1)
+
+    import math
+    steps = max(1, math.ceil(math.log2(max(nA + nB, 2))) + 1)
+    lo, hi = lax.fori_loop(0, steps, step, (lo, hi))
+    return lo
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("w", "block_out", "interpret"))
+def flims_merge_pallas(a: jnp.ndarray, b: jnp.ndarray, *, w: int = 128,
+                       block_out: int = 4096, interpret: bool = True):
+    """Merge two descending 1-D arrays with the partitioned FLiMS kernel."""
+    assert a.ndim == b.ndim == 1 and a.dtype == b.dtype
+    assert w & (w - 1) == 0
+    n_out = a.shape[0] + b.shape[0]
+    if n_out == 0:
+        return jnp.zeros((0,), a.dtype)
+    if a.shape[0] == 0:
+        return b
+    if b.shape[0] == 0:
+        return a
+    C = max(w, min(block_out, 1 << (n_out - 1).bit_length()))
+    C = (C // w) * w
+    G = -(-n_out // C)
+    Ha = C // w + 2                      # rows of each input a block may touch
+    sent = sentinel_for(a.dtype)
+
+    def rows_of(x):
+        r = -(-x.shape[0] // w) + Ha + 2
+        xp = jnp.pad(x, (0, r * w - x.shape[0]), constant_values=sent)
+        return xp.reshape(r, w)
+
+    ar, br = rows_of(a), rows_of(b)
+    # --- host-side merge-path co-ranks (vectorised binary search) ----------
+    os_ = jnp.arange(G, dtype=jnp.int32) * C
+    acut = jax.vmap(lambda o: _corank(o, a, b))(os_).astype(jnp.int32)
+    bcut = os_ - acut
+    arow0, la0 = acut // w, acut % w
+    brow0, lb0 = bcut // w, bcut % w
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((pl.Element(Ha), w),
+                         lambda g, ar0, br0, la, lb: (ar0[g], 0)),
+            pl.BlockSpec((pl.Element(Ha), w),
+                         lambda g, ar0, br0, la, lb: (br0[g], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C), lambda g, *_: (g, 0)),
+    )
+    kern = functools.partial(_merge_kernel, w=w, cycles=C // w)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, C), a.dtype),
+        interpret=interpret,
+        name="flims_merge",
+    )(arow0, brow0, la0, lb0, ar, br)
+    return out.reshape(-1)[:n_out]

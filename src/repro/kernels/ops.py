@@ -1,0 +1,62 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute with ``interpret=True``; on a real
+TPU backend they compile through Mosaic. ``kernel_sort`` is the end-to-end
+two-level sorter: Pallas chunk sort + partitioned Pallas FLiMS merge passes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flims import sentinel_for
+from repro.kernels.bitonic_sort import sort_chunks_pallas
+from repro.kernels.flims_merge import flims_merge_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def merge(a: jnp.ndarray, b: jnp.ndarray, *, w: int = 128,
+          block_out: int = 4096) -> jnp.ndarray:
+    """Descending merge of two sorted 1-D arrays (Pallas FLiMS kernel)."""
+    return flims_merge_pallas(a, b, w=w, block_out=block_out,
+                              interpret=not _on_tpu())
+
+
+def sort_rows(x: jnp.ndarray, *, rows_per_block: int = 8) -> jnp.ndarray:
+    """Descending per-row sort of an (m, c) array (Pallas bitonic kernel)."""
+    return sort_chunks_pallas(x, rows_per_block=rows_per_block,
+                              interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "w", "descending"))
+def kernel_sort(x: jnp.ndarray, *, chunk: int = 512, w: int = 128,
+                descending: bool = True) -> jnp.ndarray:
+    """Full sort of a 1-D array: chunk kernel + FLiMS merge kernel passes."""
+    n = x.shape[0]
+    if n <= 1:
+        return x
+    c = 1
+    while c < min(chunk, n):
+        c *= 2
+    n_pad = -(-n // c) * c
+    # pad rows to a power of two for clean pairwise passes
+    m = n_pad // c
+    m2 = 1
+    while m2 < m:
+        m2 *= 2
+    n_pad = m2 * c
+    xp = jnp.pad(x, (0, n_pad - n), constant_values=sentinel_for(x.dtype))
+    rows = sort_rows(xp.reshape(-1, c))
+    interp = not _on_tpu()
+    ww = min(w, c)
+    merge2 = jax.vmap(lambda u, v: flims_merge_pallas(
+        u, v, w=ww, block_out=max(ww, 4096), interpret=interp))
+    while rows.shape[0] > 1:
+        rows = merge2(rows[0::2], rows[1::2])
+    out = rows[0, :n]
+    return out if descending else out[::-1]

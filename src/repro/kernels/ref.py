@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def merge_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Descending merge oracle."""
+    return jnp.sort(jnp.concatenate([a, b]), descending=True)
+
+
+def sort_rows_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Descending per-row sort oracle for (m, c) arrays."""
+    return jnp.sort(x, axis=-1, descending=True)
+
+
+def topk_ref(x: jnp.ndarray, k: int):
+    import jax
+    return jax.lax.top_k(x, k)

@@ -1,0 +1,188 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512")
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init) — so no `from __future__` in this module.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: each cell's
+step function is jit-lowered with full in/out shardings on the production
+mesh, compiled (catching sharding mismatches / OOM / unsupported
+collectives), and its memory/cost analyses + collective schedule recorded
+for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results.json
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (analyse, collective_bytes,
+                                   model_flops_estimate)
+from repro.launch.steps import (SHAPES, cell_shardings, input_specs,
+                                long_500k_applicable, make_decode_step,
+                                make_prefill_step, make_train_step)
+from repro.models.config import ShardingConfig, TrainConfig
+from repro.parallel.act import set_context, clear_context
+
+
+# §Perf winners (measured in EXPERIMENTS.md §Perf): applied when --opt is set
+OPT_OVERRIDES = {
+    ("gemma2_27b", "train_4k"): {"sharding": {
+        "model_axis": "", "fsdp_axis": ("data", "model"),
+        "data_axes": ("pod", "data", "model")}},
+}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             sharding_overrides=None, verbose: bool = True,
+             config_overrides=None, opt: bool = False):
+    cfg = get_config(arch)
+    if config_overrides:
+        cfg = dataclasses.replace(cfg, **config_overrides)
+    if opt:
+        ovr = OPT_OVERRIDES.get((arch, shape), {})
+        if "sharding" in ovr:
+            sharding_overrides = dict(ovr["sharding"],
+                                      **(sharding_overrides or {}))
+        if "config" in ovr:
+            cfg = dataclasses.replace(cfg, **ovr["config"])
+    s = SHAPES[shape]
+    kind = s["kind"]
+    if shape == "long_500k" and not long_500k_applicable(cfg):
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "SKIP",
+                "reason": "full-attention arch: 500k decode is quadratic "
+                          "(documented in DESIGN.md §Arch-applicability)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sc = ShardingConfig(
+        shard_kv_seq=(shape == "long_500k" and cfg.arch_kind != "xlstm"))
+    if sharding_overrides:
+        sc = dataclasses.replace(sc, **sharding_overrides)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    sh = cell_shardings(cfg, shape, mesh, sc)
+    params_s, params_sh = sh["params"]
+
+    set_context(mesh, sc.data_axes, sc.model_axis)
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            _, step = make_train_step(cfg, TrainConfig(
+                global_batch=s["global_batch"], seq_len=s["seq_len"]))
+            opt_s, opt_sh = sh["opt"]
+            batch_s, batch_sh = sh["batch"]
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, opt_sh, batch_sh),
+                             out_shardings=(params_sh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_s, opt_s, batch_s)
+        elif kind == "prefill":
+            _, step = make_prefill_step(cfg)
+            batch_s, batch_sh = sh["batch"]
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_s, batch_s)
+        else:
+            kv_axis = "data" if sc.shard_kv_seq else ""
+            _, step = make_decode_step(cfg, mesh=mesh, kv_shard_axis=kv_axis)
+            cache_s, cache_sh = sh["cache"]
+            tok_s, tok_sh = sh["token"]
+            pos_s, pos_sh = sh["pos"]
+            key_s, key_sh = sh["key"]
+            jitted = jax.jit(step, in_shardings=(
+                params_sh, tok_sh, pos_sh, cache_sh, key_sh),
+                out_shardings=(tok_sh, cache_sh))
+            lowered = jitted.lower(params_s, tok_s, pos_s, cache_s, key_s)
+        compiled = lowered.compile()
+    clear_context()
+
+    mem = compiled.memory_analysis()
+    mf = model_flops_estimate(cfg, kind, s["seq_len"], s["global_batch"])
+    roof = analyse(compiled, model_flops=mf, n_chips=n_chips)
+    coll = collective_bytes(compiled.as_text())
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "OK", "seconds_to_compile": round(time.time() - t0, 1),
+        "memory": {
+            "args_gb": mem.argument_size_in_bytes / 1e9,
+            "output_gb": mem.output_size_in_bytes / 1e9,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "peak_ok": (mem.argument_size_in_bytes +
+                        mem.temp_size_in_bytes) < 16e9,
+        },
+        "collectives": coll,
+        "roofline": roof.to_dict(),
+    }
+    if verbose:
+        print(json.dumps(rec, indent=1), flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--moe-path", default=None,
+                    help="override MoE dispatch path (dense|grouped)")
+    ap.add_argument("--no-tp", action="store_true",
+                    help="pure-FSDP sharding: no tensor-parallel axis")
+    ap.add_argument("--attn-chunk", type=int, default=0)
+    ap.add_argument("--opt", action="store_true",
+                    help="apply §Perf per-cell winning configs")
+    args = ap.parse_args(argv)
+    cfg_ovr = {}
+    if args.moe_path:
+        cfg_ovr["moe_path"] = args.moe_path
+    sh_ovr = {}
+    if args.no_tp:
+        sh_ovr = {"model_axis": "", "fsdp_axis": ("data", "model"),
+                  "data_axes": ("pod", "data", "model")}
+
+    cells = []
+    archs = ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape, mp,
+                                            sharding_overrides=sh_ovr or None,
+                                            config_overrides=cfg_ovr or None,
+                                            opt=args.opt))
+                except Exception as e:
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": "multi" if mp else "single",
+                                    "status": "FAIL", "error": str(e)[:500]})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\n{len(results)} cells: "
+          f"{sum(r['status'] == 'OK' for r in results)} OK, "
+          f"{sum(r['status'] == 'SKIP' for r in results)} SKIP, "
+          f"{n_fail} FAIL")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+"""Production mesh construction (spec'd by the assignment).
+
+Defined as functions so importing this module never touches jax device
+state. Single pod: (data=16, model=16) = 256 chips. Multi-pod: a leading
+"pod" axis of 2 → 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU multi-device tests (subprocess sets device count)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,158 @@
+"""Step-function factories: train_step / prefill_step / decode_step with full
+sharding specs — shared by the dry-run, the trainer and the server."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.pipeline import make_batch_specs
+from repro.models.config import ModelConfig, ShardingConfig, TrainConfig
+from repro.models.model import build_model, sample_topk
+from repro.optim.adamw import adamw_init, adamw_update, lr_schedule
+from repro.parallel.sharding import (batch_spec, cache_specs, param_specs)
+
+
+# ---------------------------------------------------------------------------
+# shapes of the assigned input grid
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+# archs whose decode state is sub-quadratic → long_500k applies
+LONG_OK = {"zamba2-2.7b", "xlstm-1.3b", "mixtral-8x22b"}
+
+
+def long_500k_applicable(cfg: ModelConfig) -> bool:
+    return cfg.name in LONG_OK
+
+
+# ---------------------------------------------------------------------------
+# factories
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    model = build_model(cfg)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, aux = model.train_loss(p, batch)
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        lr = lr_schedule(opt_state.step, tcfg.lr, tcfg.warmup_steps,
+                         tcfg.total_steps)
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, params, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+        metrics = dict(metrics, loss=loss, lr=lr, **aux)
+        return params, opt_state, metrics
+
+    return model, train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_seq=0)
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                     kv_shard_axis: str = ""):
+    model = build_model(cfg)
+
+    def decode_step(params, token, pos, cache, key):
+        logits, cache = model.decode_step(params, token, pos, cache,
+                                          mesh=mesh,
+                                          kv_shard_axis=kv_shard_axis)
+        nxt = sample_topk(key, logits, k=64, use_flims=False)
+        return nxt, cache
+
+    return model, decode_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs + shardings for a (cfg, shape) cell
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    s = SHAPES[shape_name]
+    return make_batch_specs(cfg, s["seq_len"], s["global_batch"])
+
+
+def abstract_state(cfg: ModelConfig, shape_name: str, with_opt: bool = True):
+    """eval_shape'd params (+ optimizer state) — no allocation."""
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if not with_opt:
+        return model, params, None
+    opt = jax.eval_shape(adamw_init, params)
+    return model, params, opt
+
+
+def abstract_cache(cfg: ModelConfig, shape_name: str):
+    s = SHAPES[shape_name]
+    model = build_model(cfg)
+    B, W = s["global_batch"], s["seq_len"]
+    if cfg.arch_kind == "encdec":
+        return jax.eval_shape(
+            functools.partial(model.init_cache, B, W, enc_len=1500))
+    return jax.eval_shape(functools.partial(model.init_cache, B, W))
+
+
+def shardings_for(tree, spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def cell_shardings(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+                   sc: ShardingConfig):
+    """(in_shardings pytrees) for the cell's step function."""
+    s = SHAPES[shape_name]
+    kind = s["kind"]
+    model, params, opt = abstract_state(cfg, shape_name,
+                                        with_opt=(kind == "train"))
+    pspec = param_specs(params, sc, mesh)
+    psh = shardings_for(params, pspec, mesh)
+    out = {"params": (params, psh)}
+    if kind == "train":
+        ospec = type(opt)(P(), param_specs(opt.m, sc, mesh, zero=True),
+                          param_specs(opt.v, sc, mesh, zero=True),
+                          param_specs(opt.master, sc, mesh, zero=True))
+        out["opt"] = (opt, jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp), ospec))
+        batch = input_specs(cfg, shape_name)
+        bspec = batch_spec(batch, sc, mesh)
+        out["batch"] = (batch, shardings_for(batch, bspec, mesh))
+    elif kind == "prefill":
+        batch = input_specs(cfg, shape_name)
+        bspec = batch_spec(batch, sc, mesh)
+        out["batch"] = (batch, shardings_for(batch, bspec, mesh))
+    else:  # decode
+        cache = abstract_cache(cfg, shape_name)
+        cspec = cache_specs(cache, sc, mesh)
+        out["cache"] = (cache, shardings_for(cache, cspec, mesh))
+        B = s["global_batch"]
+        dp = tuple(a for a in sc.data_axes if a in mesh.axis_names)
+        tok_spec = P(dp) if B % max(
+            1, int(jnp.prod(jnp.array([mesh.shape[a] for a in dp])))) == 0 \
+            else P()
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        out["token"] = (tok, NamedSharding(mesh, tok_spec))
+        out["pos"] = (pos, NamedSharding(mesh, tok_spec))
+        out["key"] = (key, NamedSharding(mesh, P()))
+    return out

@@ -1,0 +1,138 @@
+"""End-to-end training driver with fault tolerance.
+
+Features (the large-scale runnability story):
+- auto-resume from the newest checkpoint (``--resume auto``)
+- atomic + async checkpointing every N steps
+- SIGTERM/SIGINT → checkpoint-and-exit (preemption handling)
+- straggler/anomaly detection: steps slower than ``straggler_factor``× the
+  running median are logged (on real pods this feeds the remediation hooks)
+- deterministic data replay (synthetic stream seeded per step)
+- optional int8 error-feedback gradient compression across pods
+
+Run small on CPU:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import time
+from statistics import median
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models.config import ShardingConfig, TrainConfig
+from repro.optim.adamw import adamw_init
+from repro.parallel.act import clear_context, set_context
+from repro.parallel.sharding import batch_spec, param_specs
+
+
+class TrainLoop:
+    def __init__(self, cfg, tcfg: TrainConfig, mesh=None):
+        self.cfg, self.tcfg, self.mesh = cfg, tcfg, mesh
+        self.model, self.step_fn = make_train_step(cfg, tcfg)
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
+                                      async_save=tcfg.async_checkpoint)
+        self.data = SyntheticLM(cfg.vocab_size, tcfg.seq_len,
+                                tcfg.global_batch, tcfg.seed)
+        self._stop = False
+        self.step_times = []
+
+    def _install_signals(self):
+        def handler(signum, frame):
+            print(f"[train] signal {signum}: checkpoint-and-exit",
+                  flush=True)
+            self._stop = True
+
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    def init_state(self):
+        params = self.model.init(jax.random.PRNGKey(self.tcfg.seed))
+        opt = adamw_init(params)
+        return params, opt
+
+    def run(self, resume: str = "auto", max_steps=None):
+        self._install_signals()
+        tc = self.tcfg
+        if self.mesh is not None:
+            set_context(self.mesh)
+        params, opt = self.init_state()
+        start = 0
+        if resume == "auto" and self.ckpt.latest_step() is not None:
+            s = self.ckpt.latest_step()
+            (params, opt), extra = self.ckpt.restore(s, (params, opt))
+            start = int(extra.get("next_step", s))
+            print(f"[train] resumed from checkpoint step {s}", flush=True)
+        jstep = jax.jit(self.step_fn, donate_argnums=(0, 1))
+        total = max_steps or tc.total_steps
+        losses = []
+        for step in range(start, total):
+            t0 = time.time()
+            batch = self.data.batch(step)
+            params, opt, metrics = jstep(params, opt, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.time() - t0
+            self.step_times.append(dt)
+            if len(self.step_times) > 5:
+                med = median(self.step_times[-50:])
+                if dt > 3.0 * med:
+                    print(f"[train] STRAGGLER step {step}: {dt:.2f}s vs "
+                          f"median {med:.2f}s", flush=True)
+            if step % 10 == 0:
+                print(f"[train] step {step} loss {loss:.4f} "
+                      f"({dt:.2f}s)", flush=True)
+            if (step + 1) % tc.checkpoint_every == 0 or self._stop \
+                    or step + 1 == total:
+                self.ckpt.save(step + 1, (params, opt),
+                               {"next_step": step + 1,
+                                "loss": loss})
+            if self._stop:
+                self.ckpt.wait()
+                print("[train] clean preemption exit", flush=True)
+                return params, opt, losses
+        self.ckpt.wait()
+        clear_context()
+        return params, opt, losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="auto")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(global_batch=args.batch, seq_len=args.seq,
+                       lr=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 10, 1),
+                       checkpoint_every=args.ckpt_every,
+                       checkpoint_dir=args.ckpt_dir)
+    loop = TrainLoop(cfg, tcfg)
+    _, _, losses = loop.run(resume=args.resume, max_steps=args.steps)
+    if losses:
+        print(f"[train] first loss {losses[0]:.4f} -> last "
+              f"{losses[-1]:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,252 @@
+"""GQA attention: training (kv-chunked flash), prefill, and decode paths.
+
+Feature flags cover the assigned architectures: GQA (all), qk-norm (qwen3),
+QKV bias (qwen1.5), attention/logit softcap (gemma2), sliding window
+(mixtral, gemma2 local layers), cross attention (whisper), rolling-buffer
+decode cache (SWA long-context), and sequence-sharded flash-decode for the
+500k-token cache (SP; psum-logsumexp combine).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import apply_rope, dense_init, rmsnorm, softcap
+from repro.parallel.act import constrain
+
+
+def attn_init(key, cfg, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd, H, K = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, H * hd, dtype),
+         "wk": dense_init(ks[1], d, K * hd, dtype),
+         "wv": dense_init(ks[2], d, K * hd, dtype),
+         "wo": dense_init(ks[3], H * hd, d, dtype, scale=1.0)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    hd, H, K = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    return q, k, v
+
+
+def _flash_over_kv(q, k, v, cfg, *, causal: bool, window: int,
+                   q_positions, kv_positions, chunk: int = 1024):
+    """Streaming-softmax attention, scanning kv chunks; f32 accumulators.
+
+    q: (B,S,H,hd); k/v: (B,T,K,hd). GQA via head-group reshape.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd ** -0.5
+    qg = (q * scale).reshape(B, S, K, G, hd)
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk //= 2
+    n_chunks = T // chunk
+    kc = k.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, hd).transpose(1, 0, 2, 3, 4)
+    pc = kv_positions.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp                       # (B,chunk,K,hd), (B,chunk)
+        s = jnp.einsum("bskgd,btkd->bskgt", qg, kb,
+                       preferred_element_type=jnp.float32)
+        if cfg.attn_softcap:
+            s = softcap(s, cfg.attn_softcap)
+        mask = jnp.ones((B, S, 1, 1, chunk), bool)
+        if causal:
+            mask &= (q_positions[:, :, None, None, None] >=
+                     pb[:, None, None, None, :])
+        if window:
+            mask &= (q_positions[:, :, None, None, None] -
+                     pb[:, None, None, None, :]) < window
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard all-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        pexp = jnp.exp(s - m_safe[..., None])
+        pexp = jnp.where(mask, pexp, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(pexp, axis=-1)
+        pv = jnp.einsum("bskgt,btkd->bskgd", pexp.astype(kb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, K, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, K, G), jnp.float32)
+    a0 = jnp.zeros((B, S, K, G, hd), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attn_apply(p, x, cfg, *, positions, window: int = 0,
+               causal: bool = True, kv_chunk: int = 1024):
+    """Training/prefill attention. x: (B,S,d)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = _flash_over_kv(q, k, v, cfg, causal=causal, window=window,
+                         q_positions=positions, kv_positions=positions,
+                         chunk=kv_chunk)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def attn_prefill(p, x, cfg, *, positions, window: int = 0,
+                 cache_len: int = 0):
+    """Prefill: returns (y, (k_cache, v_cache)) padded/rolled to cache_len."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    y = _flash_over_kv(q, k, v, cfg, causal=True, window=window,
+                       q_positions=positions, kv_positions=positions)
+    y = y.reshape(B, S, -1) @ p["wo"]
+    W = cache_len or S
+    if window and W > window:
+        W = window
+    if W >= S:
+        pad = [(0, 0), (0, W - S), (0, 0), (0, 0)]
+        kc = jnp.pad(k, pad)
+        vc = jnp.pad(v, pad)
+    else:  # rolling buffer holds the last W positions, slot = pos mod W
+        tail_k, tail_v = k[:, -W:], v[:, -W:]
+        roll = (S % W)
+        kc = jnp.roll(tail_k, roll, axis=1)
+        vc = jnp.roll(tail_v, roll, axis=1)
+    return y, (kc, vc)
+
+
+def attn_decode(p, x, cache, pos, cfg, *, window: int = 0,
+                mesh=None, kv_shard_axis: str = ""):
+    """One-token decode. x: (B,1,d); cache: (k,v) of (B,W,K,hd); pos: (B,).
+
+    With ``kv_shard_axis`` set, the cache stays sequence-sharded and the
+    softmax is combined across shards flash-decoding style (SP).
+    """
+    B = x.shape[0]
+    kc, vc = cache
+    W = kc.shape[1]
+    q, k, v = _qkv(p, x, cfg, pos[:, None])
+    slot = (pos % W) if window else jnp.minimum(pos, W - 1)
+    kc = _scatter_slot(kc, k[:, 0], slot)
+    vc = _scatter_slot(vc, v[:, 0], slot)
+    # absolute position held by each slot (rolling buffer arithmetic)
+    j = jnp.arange(W)[None, :]
+    if window:
+        kv_pos = pos[:, None] - ((pos[:, None] - j) % W)
+        # slots not yet written imply negative positions → mask them out
+        # (pos+1 fails the causal test)
+        kv_pos = jnp.where(kv_pos < 0, pos[:, None] + 1, kv_pos)
+    else:
+        kv_pos = jnp.broadcast_to(j, (B, W))
+    if kv_shard_axis and mesh is not None:
+        y = _sharded_flash_decode(q, kc, vc, kv_pos, pos, cfg, window,
+                                  mesh, kv_shard_axis)
+    else:
+        y = _flash_over_kv(q, kc, vc, cfg, causal=True, window=window,
+                           q_positions=pos[:, None], kv_positions=kv_pos)
+    y = y.reshape(B, 1, -1) @ p["wo"]
+    return y, (kc, vc)
+
+
+def _scatter_slot(cache, new, slot):
+    """cache: (B,W,K,hd); new: (B,K,hd); slot: (B,)."""
+    B, W, K, hd = cache.shape
+    onehot = (jnp.arange(W)[None, :] == slot[:, None])
+    return jnp.where(onehot[:, :, None, None], new[:, None], cache)
+
+
+def _sharded_flash_decode(q, kc, vc, kv_pos, pos, cfg, window, mesh, axis):
+    """Flash-decoding over a sequence-sharded KV cache (SP for 500k ctx)."""
+    from jax.sharding import PartitionSpec as P
+
+    def local(qb, kb, vb, pb, posb):
+        o = _partial_attn(qb, kb, vb, pb, posb, cfg, window)
+        m, l, acc = o
+        m_g = lax.pmax(m, axis)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_g), 0.0)
+        l_g = lax.psum(l * corr, axis)
+        acc_g = lax.psum(acc * corr[..., None], axis)
+        out = acc_g / jnp.maximum(l_g[..., None], 1e-37)
+        B, S, K, G, hd = out.shape
+        return out.reshape(B, S, K * G, hd).astype(qb.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(None, axis), P(None, axis), P(None, axis), P()),
+        out_specs=P(), check_vma=False)(q, kc, vc, kv_pos, pos)
+
+
+def _partial_attn(q, k, v, kv_pos, pos, cfg, window):
+    """Un-normalised attention over a local KV shard → (m, l, acc)."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = (q * hd ** -0.5).reshape(B, S, K, G, hd)
+    s = jnp.einsum("bskgd,btkd->bskgt", qg, k,
+                   preferred_element_type=jnp.float32)
+    if cfg.attn_softcap:
+        s = softcap(s, cfg.attn_softcap)
+    mask = pos[:, None, None, None, None] >= kv_pos[:, None, None, None, :]
+    if window:
+        mask &= (pos[:, None, None, None, None] -
+                 kv_pos[:, None, None, None, :]) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bskgt,btkd->bskgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def cross_attn_init(key, cfg, d_model: Optional[int] = None):
+    return attn_init(key, cfg, d_model)
+
+
+def cross_attn_apply(p, x, kv_src, cfg):
+    """Encoder-decoder cross attention (no mask, no rope)."""
+    B, S, _ = x.shape
+    T = kv_src.shape[1]
+    hd, H, K = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (kv_src @ p["wk"]).reshape(B, T, K, hd)
+    v = (kv_src @ p["wv"]).reshape(B, T, K, hd)
+    pos_q = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    pos_k = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    y = _flash_over_kv(q, k, v, cfg, causal=False, window=0,
+                       q_positions=pos_q, kv_positions=pos_k)
+    return y.reshape(B, S, -1) @ p["wo"]

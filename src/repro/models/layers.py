@@ -1,0 +1,99 @@
+"""Shared neural-net layers (pure functions + param initialisers)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.act import constrain
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float = 1.0):
+    std = scale / (in_dim ** 0.5)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) *
+            std).astype(dtype)
+
+
+def rmsnorm_init(dim: int, dtype):
+    return jnp.ones((dim,), dtype)
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype):
+    return {"w": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(x, p, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["w"].astype(jnp.float32) +
+            p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 logit soft-capping."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# --- RoPE ---------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                          # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --- MLP -----------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wi": dense_init(k1, d_model, d_ff, dtype),
+            "wg": dense_init(k2, d_model, d_ff, dtype),
+            "wo": dense_init(k3, d_ff, d_model, dtype)}
+
+
+def mlp_swiglu(x, p):
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    h = constrain(h, "dp", None, "tp")
+    return h @ p["wo"]
+
+
+def mlp_geglu(x, p):
+    h = jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wi"])
+    h = constrain(h, "dp", None, "tp")
+    return h @ p["wo"]
+
+
+# --- embeddings -----------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) *
+            0.02).astype(dtype)
+
+
+def embed_lookup(table, ids, scale: bool = False):
+    x = constrain(table[ids], "dp", None, None)
+    if scale:
+        x = x * jnp.asarray(table.shape[1] ** 0.5, x.dtype)
+    return x

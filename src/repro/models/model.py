@@ -1,0 +1,184 @@
+"""Unified Model API: init / train_loss / prefill / decode for every arch.
+
+The serving sampler uses the paper's FLiMS top-k (core.topk) — sorting as a
+first-class feature of the serving path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from types import SimpleNamespace
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import encdec as ed
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.models.layers import embed_lookup, softcap
+from repro.parallel.act import constrain
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+def _chunked_ce(params, h, targets, mask, cfg, chunk: int = 512):
+    """Cross-entropy with z-loss, computed over sequence chunks to bound the
+    (B, chunk, V) logits working set. h: (B,S,d); targets/mask: (B,S)."""
+    B, S, d = h.shape
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    nC = S // c
+
+    def one(carry, inp):
+        hc, tc, mc = inp
+        logits = constrain(hc @ params["embed"].T, "dp", None, "tp")
+        logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        zl = jnp.square(lse) * mc
+        loss, zsum, cnt = carry
+        return (loss + jnp.sum(nll), zsum + jnp.sum(zl),
+                cnt + jnp.sum(mc)), None
+
+    hs = jnp.moveaxis(h.reshape(B, nC, c, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(B, nC, c), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, nC, c).astype(jnp.float32), 1, 0)
+    one_fn = jax.checkpoint(one) if cfg.remat else one
+    (loss, zsum, cnt), _ = lax.scan(
+        one_fn, (jnp.float32(0), jnp.float32(0), jnp.float32(0)),
+        (hs, ts, ms))
+    cnt = jnp.maximum(cnt, 1.0)
+    return loss / cnt, zsum / cnt
+
+
+# --------------------------------------------------------------------------
+# model builders
+# --------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig) -> SimpleNamespace:
+    if cfg.arch_kind == "encdec":
+        return _build_encdec(cfg)
+    return _build_decoder(cfg)
+
+
+def _embed_inputs(params, batch: Dict[str, Any], cfg):
+    """Token embedding (+ vlm vision prefix). Returns x, positions."""
+    tokens = batch["tokens"]
+    B, St = tokens.shape
+    x = embed_lookup(params["embed"], tokens, cfg.embed_scale)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.n_vision_tokens and "vision" in batch:
+        v = batch["vision"].astype(x.dtype)             # (B, P, d) stub
+        x = jnp.concatenate([v, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    return x, positions
+
+
+def _build_decoder(cfg: ModelConfig) -> SimpleNamespace:
+    def init(key):
+        return tf.decoder_init(key, cfg)
+
+    def forward(params, batch):
+        x, pos = _embed_inputs(params, batch, cfg)
+        return tf.decoder_forward(params, x, cfg, pos)
+
+    def train_loss(params, batch):
+        h = forward(params, batch)
+        P = cfg.n_vision_tokens if ("vision" in batch) else 0
+        h_text = h[:, P:, :]
+        targets = batch["targets"]
+        mask = batch.get("mask", jnp.ones_like(targets, jnp.float32))
+        ce, zl = _chunked_ce(params, h_text, targets, mask, cfg)
+        return ce + 1e-4 * zl, {"ce": ce}
+
+    def init_cache(batch_size, max_seq):
+        return tf.decoder_cache_init(cfg, batch_size, max_seq)
+
+    def prefill(params, batch, max_seq, mesh=None, kv_shard_axis=""):
+        """Run the prompt through, build the cache, return last logits.
+
+        Implemented as forward + scatter of computed K/V (attention caches
+        are filled by attn_prefill inside a dedicated scan)."""
+        x, pos = _embed_inputs(params, batch, cfg)
+        h = tf.decoder_forward(params, x, cfg, pos)
+        logits = tf.lm_logits(params, h[:, -1:, :], cfg)
+        return logits[:, 0, :]
+
+    def decode_step(params, token, pos, cache, mesh=None, kv_shard_axis=""):
+        """token: (B,) int32; pos: (B,)."""
+        x = embed_lookup(params["embed"], token[:, None], cfg.embed_scale)
+        x = x.astype(jnp.dtype(cfg.compute_dtype))
+        h, cache = tf.decoder_decode_step(params, x, cache, pos, cfg,
+                                          mesh=mesh,
+                                          kv_shard_axis=kv_shard_axis)
+        logits = tf.lm_logits(params, h, cfg)
+        return logits[:, 0, :], cache
+
+    return SimpleNamespace(cfg=cfg, init=init, forward=forward,
+                           train_loss=train_loss, init_cache=init_cache,
+                           prefill=prefill, decode_step=decode_step)
+
+
+def _build_encdec(cfg: ModelConfig) -> SimpleNamespace:
+    def init(key):
+        return ed.encdec_init(key, cfg)
+
+    def forward(params, batch):
+        enc = ed.encode(params, batch["frames"], cfg)
+        return ed.decode_train(params, enc, batch["tokens"], cfg)
+
+    def train_loss(params, batch):
+        h = forward(params, batch)
+        targets = batch["targets"]
+        mask = batch.get("mask", jnp.ones_like(targets, jnp.float32))
+        ce, zl = _chunked_ce(params, h, targets, mask, cfg)
+        return ce + 1e-4 * zl, {"ce": ce}
+
+    def init_cache(batch_size, max_seq, enc_len=1500):
+        return ed.encdec_cache_init(cfg, batch_size, max_seq, enc_len)
+
+    def prefill(params, batch, max_seq, mesh=None, kv_shard_axis=""):
+        enc = ed.encode(params, batch["frames"], cfg)
+        cache = ed.encdec_cache_init(cfg, batch["frames"].shape[0], max_seq,
+                                     enc.shape[1])
+        cache = ed.encdec_fill_cross_cache(params, enc, cfg, cache)
+        h = ed.decode_train(params, enc, batch["tokens"], cfg)
+        logits = tf.lm_logits(params, h[:, -1:, :], cfg)
+        return logits[:, 0, :], cache
+
+    def decode_step(params, token, pos, cache, mesh=None, kv_shard_axis=""):
+        x = embed_lookup(params["embed"], token[:, None], cfg.embed_scale)
+        x = x.astype(jnp.dtype(cfg.compute_dtype))
+        h, cache = ed.encdec_decode_step(params, x, cache, pos, cfg)
+        logits = tf.lm_logits(params, h, cfg)
+        return logits[:, 0, :], cache
+
+    return SimpleNamespace(cfg=cfg, init=init, forward=forward,
+                           train_loss=train_loss, init_cache=init_cache,
+                           prefill=prefill, decode_step=decode_step)
+
+
+# --------------------------------------------------------------------------
+# sampling (FLiMS top-k — the paper's sorter in the serving path)
+# --------------------------------------------------------------------------
+
+def sample_topk(key, logits, k: int = 64, temperature: float = 1.0,
+                use_flims: bool = True):
+    """logits: (B, V) → sampled token ids (B,)."""
+    from repro.core.topk import flims_topk
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if use_flims:
+        vals, idx = flims_topk(logits, k)
+    else:
+        vals, idx = lax.top_k(logits, k)
+    gumbel = -jnp.log(-jnp.log(
+        jax.random.uniform(key, vals.shape, minval=1e-9, maxval=1.0)))
+    choice = jnp.argmax(vals / temperature + gumbel, axis=-1)
+    return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0]

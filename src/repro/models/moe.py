@@ -1,0 +1,295 @@
+"""Mixture-of-Experts layer (mixtral 8e top-2, moonshot 64e top-6).
+
+Two dispatch paths:
+- ``dense``: one-hot combine einsum over the expert axis — fully static,
+  GSPMD-friendly; experts shard over the model axis (EP) or their hidden dim
+  shards (TP) per ShardingConfig. This is the path the 512-chip dry-run uses.
+- ``sorted``: dropless dispatch that orders tokens by expert with the FLiMS
+  stable argsort (core.mergesort) — the paper's sorter as a first-class
+  framework feature. Used on small/local shapes (examples/moe_routing.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.core.mergesort import flims_argsort
+from repro.parallel.act import constrain, constrain_expert_hidden
+
+
+def moe_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    E, d, f = cfg.n_experts, cfg.d_model, (cfg.moe_d_ff or cfg.d_ff)
+    ks = jax.random.split(key, 4)
+
+    def stack(k, din, dout):
+        return jax.vmap(lambda kk: dense_init(kk, din, dout, dtype))(
+            jax.random.split(k, E))
+
+    return {"router": dense_init(ks[0], d, E, jnp.float32),
+            "wi": stack(ks[1], d, f),
+            "wg": stack(ks[2], d, f),
+            "wo": stack(ks[3], f, d)}
+
+
+def router_probs(p, x, cfg):
+    """x: (B,S,d) → (weights (B,S,k), idx (B,S,k)) with softmax over top-k."""
+    logits = (x.astype(jnp.float32) @ p["router"])
+    k = cfg.n_experts_active
+    vals, idx = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(vals, axis=-1)
+    return w.astype(x.dtype), idx
+
+
+def moe_apply_dense(p, x, cfg):
+    """Masked dense-compute MoE: every expert sees every token (scan over the
+    expert axis keeps the working set at one expert's activations).
+
+    FLOP-inflated by E/k vs dropless dispatch but fully layout-static — the
+    paper-faithful baseline path; §Perf replaces it with FLiMS-sorted EP
+    dispatch (see ``moe_apply_sorted`` / the shard_map EP variant).
+    """
+    B, S, d = x.shape
+    w, idx = router_probs(p, x, cfg)                  # (B,S,k)
+    E = cfg.n_experts
+    eye = jnp.arange(E, dtype=idx.dtype)
+    comb = jnp.sum((idx[..., None] == eye) * w[..., None], axis=2)  # (B,S,E)
+    comb = comb.astype(x.dtype)
+
+    # scan over sequence chunks: keeps the (B,E,Sc,f) working set bounded
+    # while the expert einsums stay parallel over the (sharded) expert axis.
+    Sc = S
+    for cand in (512, 256, 128, 64):
+        if S % cand == 0 and S > cand:
+            Sc = cand
+            break
+
+    def one_chunk(_, inp):
+        xc, cc = inp                                  # (B,Sc,d), (B,Sc,E)
+        h = jnp.einsum("bsd,edf->ebsf", xc, p["wg"])
+        h = jax.nn.silu(h) * jnp.einsum("bsd,edf->ebsf", xc, p["wi"])
+        h = constrain_expert_hidden(h)                # EP or TP fallback
+        # combine-weight h first, then contract (e,f) jointly: avoids ever
+        # materialising the (E,B,Sc,d) post-expert tensor
+        hw = h * jnp.moveaxis(cc, -1, 0)[..., None]
+        return None, jnp.einsum("ebsf,efd->bsd", hw, p["wo"])
+
+    xcs = jnp.moveaxis(x.reshape(B, S // Sc, Sc, d), 1, 0)
+    ccs = jnp.moveaxis(comb.reshape(B, S // Sc, Sc, E), 1, 0)
+    _, ys = jax.lax.scan(one_chunk, None, (xcs, ccs))
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, d)
+
+
+def moe_apply_sorted(p, x, cfg, capacity_factor: float = 1.25):
+    """Dropless-ish dispatch: FLiMS-sort token-expert pairs, bucket, compute.
+
+    Tokens are ordered by (expert, position) with the stable FLiMS argsort,
+    then each expert processes a contiguous capacity-padded slab.
+    """
+    B, S, d = x.shape
+    T = B * S
+    k = cfg.n_experts_active
+    E = cfg.n_experts
+    w, idx = router_probs(p, x, cfg)
+    xf = x.reshape(T, d)
+    flat_e = idx.reshape(T * k)                        # expert of each pair
+    flat_w = w.reshape(T * k)
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    # FLiMS stable argsort on expert id (ascending): groups pairs by expert,
+    # original order preserved inside each group (stability = paper alg. 3).
+    order = flims_argsort(flat_e.astype(jnp.int32), descending=False)
+    e_sorted = flat_e[order]
+    t_sorted = tok[order]
+    w_sorted = flat_w[order]
+    cap = int(capacity_factor * T * k / E) + 1
+    # rank of each pair within its expert group
+    pos_in_e = jnp.arange(T * k) - jnp.searchsorted(e_sorted, e_sorted,
+                                                    side="left")
+    keep = pos_in_e < cap
+    slab_idx = jnp.where(keep, e_sorted * cap + pos_in_e, E * cap)
+    xin = jnp.zeros((E * cap + 1, d), x.dtype).at[slab_idx].set(xf[t_sorted])
+    xin = xin[:-1].reshape(E, cap, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["wg"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xin, p["wi"])
+    yslab = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(E * cap, d)
+    contrib = yslab[jnp.where(keep, slab_idx, 0)] * (w_sorted * keep)[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[t_sorted].add(contrib)
+    return y.reshape(B, S, d)
+
+
+def _one_group_dispatch(p, xf, cfg, cap):
+    """Sorted dispatch for one device group. xf: (T, d) local tokens."""
+    T, d = xf.shape
+    k, E = cfg.n_experts_active, cfg.n_experts
+    w, idx = router_probs(p, xf[None], cfg)
+    w, idx = w[0], idx[0]                              # (T, k)
+    flat_e = idx.reshape(T * k).astype(jnp.int32)
+    flat_w = w.reshape(T * k)
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    # FLiMS stable argsort groups pairs by expert (paper alg. 3 stability
+    # keeps token order inside each expert slab)
+    order = flims_argsort(flat_e, descending=False)
+    e_sorted = flat_e[order]
+    t_sorted = tok[order]
+    w_sorted = flat_w[order]
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - jnp.searchsorted(
+        e_sorted, e_sorted, side="left").astype(jnp.int32)
+    keep = pos_in_e < cap
+    slab_idx = jnp.where(keep, e_sorted * cap + pos_in_e, E * cap)
+    xin = jnp.zeros((E * cap + 1, d), xf.dtype).at[slab_idx].set(
+        xf[t_sorted])
+    xin = xin[:-1].reshape(E, cap, d)
+    return xin, slab_idx, t_sorted, w_sorted, keep
+
+
+def moe_apply_grouped(p, x, cfg, capacity_factor: float = 1.25,
+                      seq_chunk: int = 512):
+    """FLiMS-sorted expert-parallel dispatch, grouped by data shard.
+
+    Beyond-paper §Perf path: the batch is viewed as G device groups (G = the
+    data-parallel shard count, so every group is device-local under GSPMD);
+    each group independently sorts its (token, expert) pairs with the FLiMS
+    stable argsort and packs per-expert capacity slabs; the expert einsum
+    then does only ``k·cf/E`` of the dense path's FLOPs. Tokens over the
+    per-group capacity are dropped (standard GShard semantics; cf=1.25).
+    The sequence is processed in chunks (scan) to bound the slab buffers.
+    """
+    from repro.parallel.act import constrain, group_count
+    B, S, d = x.shape
+    k, E = cfg.n_experts_active, cfg.n_experts
+    G = group_count(B)
+    Sc = S
+    for cand in (seq_chunk, seq_chunk // 2, seq_chunk // 4):
+        if cand and S % cand == 0 and S > cand:
+            Sc = cand
+            break
+    T = (B // G) * Sc
+    cap = int(capacity_factor * T * k / E) + 1
+
+    def one_chunk(_, xc):                               # xc: (B, Sc, d)
+        xg = constrain(xc.reshape(G, T, d), "dp", None, None)
+        xin, slab_idx, t_sorted, w_sorted, keep = jax.vmap(
+            lambda xf: _one_group_dispatch(p, xf, cfg, cap))(xg)
+        xin = constrain(xin, "dp", None, None, None)    # (G, E, cap, d)
+        h = jnp.einsum("gecd,edf->gecf", xin, p["wg"])
+        h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xin, p["wi"])
+        h = constrain_expert_hidden_grouped(h)
+        y = jnp.einsum("gecf,efd->gecd", h, p["wo"])    # (G, E, cap, d)
+        y = constrain(y, "dp", None, None, None)
+
+        def combine(yslab, slab_idx, t_sorted, w_sorted, keep):
+            ys = yslab.reshape(E * cap, d)
+            contrib = ys[jnp.where(keep, slab_idx, 0)] * \
+                (w_sorted * keep)[:, None]
+            return jnp.zeros((T, d), x.dtype).at[t_sorted].add(contrib)
+
+        yg = jax.vmap(combine)(y, slab_idx, t_sorted, w_sorted, keep)
+        return None, constrain(yg, "dp", None, None).reshape(B, Sc, d)
+
+    if Sc == S:
+        return one_chunk(None, x)[1]
+    xcs = jnp.moveaxis(x.reshape(B, S // Sc, Sc, d), 1, 0)
+    _, ys = jax.lax.scan(one_chunk, None, xcs)
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, d)
+
+
+def constrain_expert_hidden_grouped(h):
+    """(G, E, cap, f): groups on DP; experts on TP when divisible, else f."""
+    from repro.parallel.act import _ctx, _axis_size, constrain
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None:
+        return h
+    tp = _ctx.tp
+    if tp is not None and h.shape[1] % _axis_size(mesh, tp) == 0:
+        return constrain(h, "dp", "tp", None, None)
+    return constrain(h, "dp", None, None, "tp")
+
+
+def moe_apply_ep(p, x, cfg, capacity_factor: float = 1.25,
+                 seq_chunk: int = 1024):
+    """Manual expert parallelism via shard_map (the §Perf final form).
+
+    Every device holds E/|model| experts and a data-shard of tokens. Within
+    a data row all model-shards see the same tokens; each device FLiMS-sorts
+    its tokens by expert, builds capacity slabs for *its own* experts only,
+    runs them, combines locally, and one psum over the model axis sums the
+    expert partials. No slab tensor ever crosses the data axis (GSPMD-auto
+    was measured all-gathering the full 4 GB slab instead).
+    """
+    from repro.parallel.act import _ctx, _axis_size
+    mesh = getattr(_ctx, "_force_mesh", None) or getattr(_ctx, "mesh", None)
+    tp = getattr(_ctx, "tp", None)
+    E = cfg.n_experts
+    if mesh is None or tp is None or E % _axis_size(mesh, tp) != 0:
+        return moe_apply_grouped(p, x, cfg, capacity_factor)
+    from jax.sharding import PartitionSpec as P
+    dp = _ctx.dp or ()
+    B, S, d = x.shape
+    k = cfg.n_experts_active
+    n_tp = _axis_size(mesh, tp)
+    E_loc = E // n_tp
+    Sc = min(seq_chunk, S)
+    while S % Sc:
+        Sc //= 2
+
+    def local(xl, router, wi, wg, wo):
+        # xl: (B_loc, S, d); wi/wg/wo: (E_loc, ...) this device's experts
+        B_loc = xl.shape[0]
+        T = B_loc * Sc
+        cap = int(capacity_factor * T * k / E) + 1
+        e0 = jax.lax.axis_index(tp) * E_loc
+
+        def chunk(_, xc):
+            xf = xc.reshape(T, d)
+            logits = xf.astype(jnp.float32) @ router
+            wgt, idx = jax.lax.top_k(logits, k)
+            wgt = jax.nn.softmax(wgt, axis=-1).astype(xf.dtype)
+            flat_e = idx.reshape(T * k).astype(jnp.int32)
+            flat_w = wgt.reshape(T * k)
+            tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+            order = flims_argsort(flat_e, descending=False)
+            e_sorted = flat_e[order]
+            t_sorted = tok[order]
+            w_sorted = flat_w[order]
+            pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - jnp.searchsorted(
+                e_sorted, e_sorted, side="left").astype(jnp.int32)
+            mine = (e_sorted >= e0) & (e_sorted < e0 + E_loc)
+            keep = (pos_in_e < cap) & mine
+            slab_idx = jnp.where(keep, (e_sorted - e0) * cap + pos_in_e,
+                                 E_loc * cap)
+            xin = jnp.zeros((E_loc * cap + 1, d), xf.dtype) \
+                .at[slab_idx].set(xf[t_sorted])
+            xin = xin[:-1].reshape(E_loc, cap, d)
+            h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, wg))
+            h = h * jnp.einsum("ecd,edf->ecf", xin, wi)
+            ys = jnp.einsum("ecf,efd->ecd", h, wo).reshape(E_loc * cap, d)
+            contrib = ys[jnp.where(keep, slab_idx, 0)] * \
+                (w_sorted * keep)[:, None]
+            part = jnp.zeros((T, d), xf.dtype).at[t_sorted].add(contrib)
+            part = jax.lax.psum(part, tp)          # sum expert partials
+            return None, part.reshape(B_loc, Sc, d)
+
+        xcs = jnp.moveaxis(xl.reshape(B_loc, S // Sc, Sc, d), 1, 0)
+        _, ys = jax.lax.scan(chunk, None, xcs)
+        return jnp.moveaxis(ys, 0, 1).reshape(B_loc, S, d)
+
+    dspec = tuple(dp) or None
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dspec, None, None), P(), P(tp), P(tp), P(tp)),
+        out_specs=P(dspec, None, None), check_vma=False)(
+            x, p["router"], p["wi"], p["wg"], p["wo"])
+
+
+def moe_apply(p, x, cfg, mode: str = None):
+    mode = mode or getattr(cfg, "moe_path", "dense")
+    if mode == "sorted":
+        return moe_apply_sorted(p, x, cfg)
+    if mode == "grouped":
+        return moe_apply_grouped(p, x, cfg)
+    if mode == "ep":
+        return moe_apply_ep(p, x, cfg)
+    return moe_apply_dense(p, x, cfg)

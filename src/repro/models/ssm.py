@@ -1,0 +1,150 @@
+"""Mamba2 (SSD) block for the zamba2 hybrid architecture.
+
+Chunked state-space-duality form: within-chunk quadratic attention-like term
+plus inter-chunk recurrent state carried by a scan — O(S·Q) compute with
+O(H·hd·N) state, which is what makes the 500k-token decode shape tractable
+(state is constant-size; no KV cache growth).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rmsnorm
+from repro.parallel.act import constrain
+
+
+def mamba2_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    hd = cfg.ssm_head_dim
+    H = d_in // hd
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    conv_k = 4
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_k, d_in + 2 * N),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_in + 2 * N,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),        # A = -exp(A_log) ∈ (-∞,0)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),  # softplus ≈ 0.12
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[5], d_in, d, dtype),
+    }
+
+
+def _split_proj(p, x, cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    N = cfg.ssm_state
+    H = d_in // cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    return z, xbc, dt, d_in, N, H
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv, kernel k. state: (B, k-1, C) for decode."""
+    k = w.shape[0]
+    B, S, C = xbc.shape
+    if state is None:
+        padded = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        padded = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(padded[:, i:i + S, :] * w[i][None, None, :] for i in range(k))
+    new_state = padded[:, -(k - 1):, :]
+    return jax.nn.silu(out + b), new_state
+
+
+def mamba2_apply(p, x, cfg, *, chunk: int = 128):
+    """Training/prefill forward. x: (B,S,d) → (B,S,d)."""
+    B, S, d = x.shape
+    z, xbc, dt, d_in, N, H = _split_proj(p, x, cfg)
+    hd = cfg.ssm_head_dim
+    xbc = constrain(xbc, "dp", None, "tp")
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    xs = constrain(xs.reshape(B, S, H, hd), "dp", None, "tp", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    la = dt * A[None, None, :]                                    # log decay
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nC = S // Q
+    xs_c = xs.reshape(B, nC, Q, H, hd)
+    B_c = Bm.reshape(B, nC, Q, N)
+    C_c = Cm.reshape(B, nC, Q, N)
+    la_c = la.reshape(B, nC, Q, H)
+    dt_c = dt.reshape(B, nC, Q, H)
+
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def per_chunk(S_prev, inp):
+        xs_q, B_q, C_q, la_q, dt_q = inp          # (B,Q,H,hd) (B,Q,N) (B,Q,H)
+        cum = jnp.cumsum(la_q, axis=1)                            # (B,Q,H)
+        total = cum[:, -1, :]                                     # (B,H)
+        # intra-chunk (quadratic in Q): L[i,j] = exp(cum_i - cum_j), i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]            # (B,Q,Q,H)
+        L = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bin,bjn->bij", C_q.astype(jnp.float32),
+                        B_q.astype(jnp.float32))
+        M = CB[..., None] * L                                     # (B,Q,Q,H)
+        xdt = xs_q.astype(jnp.float32) * dt_q[..., None]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, xdt)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bin,bih,bhnp->bihp",
+                             C_q.astype(jnp.float32), jnp.exp(cum), S_prev)
+        # state update: S_new = dec*S_prev + sum_j exp(total-cum_j) dt_j B_j x_j
+        wgt = jnp.exp(total[:, None, :] - cum)                    # (B,Q,H)
+        ST = jnp.einsum("bjn,bjh,bjhp->bhnp", B_q.astype(jnp.float32),
+                        wgt * dt_q, xs_q.astype(jnp.float32))
+        S_new = S_prev * jnp.exp(total)[:, :, None, None] + ST
+        return S_new, y_intra + y_inter
+
+    S0 = jnp.zeros((B, H, N, hd), jnp.float32)
+    _, y_c = lax.scan(per_chunk, S0,
+                      (jnp.moveaxis(xs_c, 1, 0), jnp.moveaxis(B_c, 1, 0),
+                       jnp.moveaxis(C_c, 1, 0), jnp.moveaxis(la_c, 1, 0),
+                       jnp.moveaxis(dt_c, 1, 0)))
+    y = jnp.moveaxis(y_c, 0, 1).reshape(B, S, H, hd)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba2_decode_init(cfg, batch: int, dtype=jnp.float32):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    return {"S": jnp.zeros((batch, H, N, cfg.ssm_head_dim), jnp.float32),
+            "conv": jnp.zeros((batch, 3, d_in + 2 * N), dtype)}
+
+
+def mamba2_decode(p, x, state, cfg):
+    """Single-token decode. x: (B,1,d); state: {'S', 'conv'}."""
+    B = x.shape[0]
+    z, xbc, dt, d_in, N, H = _split_proj(p, x, cfg)
+    hd = cfg.ssm_head_dim
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state["conv"])
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    xs = xs.reshape(B, H, hd).astype(jnp.float32)
+    Bm = Bm[:, 0].astype(jnp.float32)                 # (B,N)
+    Cm = Cm[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt * A[None, :])                    # (B,H)
+    S_new = (state["S"] * dec[:, :, None, None] +
+             jnp.einsum("bn,bh,bhp->bhnp", Bm, dt, xs))
+    y = jnp.einsum("bn,bhnp->bhp", Cm, S_new)
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"S": S_new, "conv": conv_state}

@@ -1,0 +1,318 @@
+"""Decoder-only LM assembly for all decoder families, scan-over-layers.
+
+Families:
+- dense / vlm   : [attn, mlp] blocks; gemma2 alternates local-SWA/global pairs
+- moe           : [attn, moe] blocks (mixtral SWA, moonshot dense-attn)
+- mamba_hybrid  : mamba2 backbone + one shared attention block applied every
+                  ``hybrid_attn_every`` layers (zamba2)
+- xlstm         : groups of (slstm_every-1) mLSTM + 1 sLSTM
+
+Parameters are stacked over layer groups so the HLO is depth-independent
+(lax.scan over the stack); remat is applied per group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm, xlstm
+from repro.models.layers import (embed_init, embed_lookup, mlp_init,
+                                 mlp_swiglu, mlp_geglu, rmsnorm,
+                                 rmsnorm_init, softcap)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _stacked(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _block_init(key, cfg, kind: str):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {}
+    if kind in ("attn", "attn_local", "attn_global"):
+        p["attn"] = attn.attn_init(ks[0], cfg)
+        p["attn_norm"] = rmsnorm_init(cfg.d_model, dtype)
+        if cfg.family == "moe":
+            p["moe"] = moe_mod.moe_init(ks[1], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        p["mlp_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    elif kind == "mamba":
+        p["mamba"] = ssm.mamba2_init(ks[0], cfg)
+        p["norm"] = rmsnorm_init(cfg.d_model, dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = xlstm.mlstm_init(ks[0], cfg)
+        p["norm"] = rmsnorm_init(cfg.d_model, dtype)
+    elif kind == "slstm":
+        p["slstm"] = xlstm.slstm_init(ks[0], cfg)
+        p["norm"] = rmsnorm_init(cfg.d_model, dtype)
+    return p
+
+
+def decoder_init(key, cfg) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_blocks, k_shared, k_head = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    L = cfg.n_layers
+    if cfg.arch_kind == "mamba_hybrid":
+        params["blocks"] = _stacked(
+            lambda k: _block_init(k, cfg, "mamba"), k_blocks, L)
+        params["shared_attn"] = _block_init(k_shared, cfg, "attn")
+    elif cfg.arch_kind == "xlstm":
+        k = cfg.slstm_every
+        ng = L // k
+        params["mlstm"] = _stacked(
+            lambda kk: _stacked(lambda k2: _block_init(k2, cfg, "mlstm"),
+                                kk, k - 1), k_blocks, ng)
+        params["slstm"] = _stacked(
+            lambda kk: _block_init(kk, cfg, "slstm"), k_shared, ng)
+    elif cfg.local_global_alternate:
+        params["local"] = _stacked(
+            lambda k: _block_init(k, cfg, "attn_local"), k_blocks, L // 2)
+        params["global"] = _stacked(
+            lambda k: _block_init(k, cfg, "attn_global"), k_shared, L // 2)
+    else:
+        params["blocks"] = _stacked(
+            lambda k: _block_init(k, cfg, "attn"), k_blocks, L)
+    return params
+
+
+# --------------------------------------------------------------------------
+# block application (train / prefill-less forward)
+# --------------------------------------------------------------------------
+
+def _apply_attn_block(p, x, cfg, positions, window):
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    x = x + attn.attn_apply(p["attn"], h, cfg, positions=positions,
+                            window=window)
+    h = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if "moe" in p:
+        x = x + moe_mod.moe_apply(p["moe"], h, cfg)
+    else:
+        mlp = mlp_geglu if cfg.attn_softcap else mlp_swiglu   # gemma: gelu
+        x = x + mlp(h, p["mlp"])
+    return x
+
+
+def _apply_mamba_block(p, x, cfg):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    return x + ssm.mamba2_apply(p["mamba"], h, cfg)
+
+
+def _apply_mlstm_block(p, x, cfg):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    return x + xlstm.mlstm_apply(p["mlstm"], h, cfg)
+
+
+def _apply_slstm_block(p, x, cfg):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    return x + xlstm.slstm_apply(p["slstm"], h, cfg)
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def decoder_forward(params, x, cfg, positions):
+    """Backbone over embedded input x: (B,S,d) → (B,S,d) normalised."""
+    if cfg.arch_kind == "mamba_hybrid":
+        k = cfg.hybrid_attn_every
+        L = cfg.n_layers
+        ng = L // k
+        stack = jax.tree.map(
+            lambda t: t.reshape((ng, k) + t.shape[1:]), params["blocks"])
+        shared = params["shared_attn"]
+
+        def group(x, gp):
+            x = _apply_attn_block(shared, x, cfg, positions, 0)
+
+            def inner(x, bp):
+                return _apply_mamba_block(bp, x, cfg), None
+
+            x, _ = lax.scan(inner, x, gp)
+            return x, None
+
+        x, _ = lax.scan(_maybe_remat(group, cfg), x, stack)
+    elif cfg.arch_kind == "xlstm":
+        def group(x, gp):
+            mp, sp = gp
+
+            def inner(x, bp):
+                return _apply_mlstm_block(bp, x, cfg), None
+
+            x, _ = lax.scan(inner, x, mp)
+            x = _apply_slstm_block(sp, x, cfg)
+            return x, None
+
+        x, _ = lax.scan(_maybe_remat(group, cfg),
+                        x, (params["mlstm"], params["slstm"]))
+    elif cfg.local_global_alternate:
+        def group(x, gp):
+            lp, gpp = gp
+            x = _apply_attn_block(lp, x, cfg, positions, cfg.sliding_window)
+            x = _apply_attn_block(gpp, x, cfg, positions, 0)
+            return x, None
+
+        x, _ = lax.scan(_maybe_remat(group, cfg),
+                        x, (params["local"], params["global"]))
+    else:
+        window = cfg.sliding_window
+
+        def block(x, bp):
+            return _apply_attn_block(bp, x, cfg, positions, window), None
+
+        x, _ = lax.scan(_maybe_remat(block, cfg), x, params["blocks"])
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def lm_logits(params, h, cfg):
+    logits = h @ params["embed"].T
+    return softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+# --------------------------------------------------------------------------
+# decode caches
+# --------------------------------------------------------------------------
+
+def _attn_cache_init(cfg, batch, cache_len, dtype):
+    K, hd = cfg.n_kv_heads, cfg.hd
+    z = jnp.zeros((batch, cache_len, K, hd), dtype)
+    return (z, z)
+
+
+def _bcast(tree, n: int):
+    return jax.tree.map(lambda t: jnp.broadcast_to(t[None], (n,) + t.shape),
+                        tree)
+
+
+def decoder_cache_init(cfg, batch: int, max_seq: int):
+    """Pytree of stacked per-layer decode caches."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.arch_kind == "mamba_hybrid":
+        k = cfg.hybrid_attn_every
+        ng = cfg.n_layers // k
+        mamba = _bcast(ssm.mamba2_decode_init(cfg, batch, dtype),
+                       cfg.n_layers)
+        attn_c = _bcast(_attn_cache_init(cfg, batch, max_seq, dtype), ng)
+        return {"mamba": mamba, "attn": attn_c}
+    if cfg.arch_kind == "xlstm":
+        k = cfg.slstm_every
+        ng = cfg.n_layers // k
+        ml = _bcast(_bcast(xlstm.mlstm_decode_init(cfg, batch), k - 1), ng)
+        sl = _bcast(xlstm.slstm_decode_init(cfg, batch), ng)
+        return {"mlstm": ml, "slstm": sl}
+    if cfg.local_global_alternate:
+        Wl = min(max_seq, cfg.sliding_window)
+        loc = _bcast(_attn_cache_init(cfg, batch, Wl, dtype),
+                     cfg.n_layers // 2)
+        glo = _bcast(_attn_cache_init(cfg, batch, max_seq, dtype),
+                     cfg.n_layers // 2)
+        return {"local": loc, "global": glo}
+    W = max_seq
+    if cfg.sliding_window:
+        W = min(max_seq, cfg.sliding_window)
+    return _bcast(_attn_cache_init(cfg, batch, W, dtype), cfg.n_layers)
+
+
+# --------------------------------------------------------------------------
+# decode step
+# --------------------------------------------------------------------------
+
+def _attn_block_decode(p, x, cache, pos, cfg, window, mesh=None,
+                       kv_shard_axis=""):
+    h = rmsnorm(x, p["attn_norm"], cfg.norm_eps)
+    y, cache = attn.attn_decode(p["attn"], h, cache, pos, cfg, window=window,
+                                mesh=mesh, kv_shard_axis=kv_shard_axis)
+    x = x + y
+    h = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if "moe" in p:
+        x = x + moe_mod.moe_apply(p["moe"], h, cfg)
+    else:
+        mlp = mlp_geglu if cfg.attn_softcap else mlp_swiglu
+        x = x + mlp(h, p["mlp"])
+    return x, cache
+
+
+def decoder_decode_step(params, x, cache, pos, cfg, mesh=None,
+                        kv_shard_axis=""):
+    """x: (B,1,d) embedded token; pos: (B,). Returns (h, new_cache)."""
+    if cfg.arch_kind == "mamba_hybrid":
+        k = cfg.hybrid_attn_every
+        ng = cfg.n_layers // k
+        stack = jax.tree.map(
+            lambda t: t.reshape((ng, k) + t.shape[1:]), params["blocks"])
+        shared = params["shared_attn"]
+
+        def group(x, gp):
+            bp, ac, mc = gp
+            x, ac = _attn_block_decode(shared, x, ac, pos, cfg, 0, mesh,
+                                       kv_shard_axis)
+
+            def inner(x, inp):
+                bpp, mcc = inp
+                h = rmsnorm(x, bpp["norm"], cfg.norm_eps)
+                y, mcc = ssm.mamba2_decode(bpp["mamba"], h, mcc, cfg)
+                return x + y, mcc
+
+            x, mc = lax.scan(inner, x, (bp, mc))
+            return x, (ac, mc)
+
+        mamba_c = jax.tree.map(
+            lambda t: t.reshape((ng, k) + t.shape[1:]), cache["mamba"])
+        x, (ac, mc) = lax.scan(group, x, (stack, cache["attn"], mamba_c))
+        new_cache = {"mamba": jax.tree.map(
+            lambda t: t.reshape((cfg.n_layers,) + t.shape[2:]), mc),
+            "attn": ac}
+    elif cfg.arch_kind == "xlstm":
+        def group(x, gp):
+            mp, sp, mlc, slc = gp
+
+            def inner(x, inp):
+                bpp, c = inp
+                h = rmsnorm(x, bpp["norm"], cfg.norm_eps)
+                y, c = xlstm.mlstm_decode(bpp["mlstm"], h, c, cfg)
+                return x + y, c
+
+            x, mlc = lax.scan(inner, x, (mp, mlc))
+            h = rmsnorm(x, sp["norm"], cfg.norm_eps)
+            y, slc = xlstm.slstm_decode(sp["slstm"], h, slc, cfg)
+            return x + y, (mlc, slc)
+
+        x, (mlc, slc) = lax.scan(
+            group, x, (params["mlstm"], params["slstm"],
+                       cache["mlstm"], cache["slstm"]))
+        new_cache = {"mlstm": mlc, "slstm": slc}
+    elif cfg.local_global_alternate:
+        def group(x, gp):
+            lp, gpp, lc, gc = gp
+            x, lc = _attn_block_decode(lp, x, lc, pos, cfg,
+                                       cfg.sliding_window)
+            x, gc = _attn_block_decode(gpp, x, gc, pos, cfg, 0, mesh,
+                                       kv_shard_axis)
+            return x, (lc, gc)
+
+        x, (lc, gc) = lax.scan(group, x, (params["local"], params["global"],
+                                          cache["local"], cache["global"]))
+        new_cache = {"local": lc, "global": gc}
+    else:
+        def block(x, inp):
+            bp, c = inp
+            x, c = _attn_block_decode(bp, x, c, pos, cfg, cfg.sliding_window,
+                                      mesh, kv_shard_axis)
+            return x, c
+
+        x, new_cache = lax.scan(block, x, (params["blocks"], cache))
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), new_cache

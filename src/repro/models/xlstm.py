@@ -1,0 +1,198 @@
+"""xLSTM blocks (mLSTM + sLSTM) for the xlstm-1.3b architecture.
+
+mLSTM: matrix-memory linear-attention recurrence with exponential input gate
+and forget gate, computed in a chunked parallel form (state carried across
+chunks by a scan) — sub-quadratic, so the 500k decode shape runs with O(1)
+state. sLSTM: scalar-memory recurrent block via lax.scan over time.
+Gate stabilisation follows the paper's m-state trick (log-space max).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rmsnorm
+from repro.parallel.act import constrain
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 6)
+    return {"wq": dense_init(ks[0], d, H * hd, dtype),
+            "wk": dense_init(ks[1], d, H * hd, dtype),
+            "wv": dense_init(ks[2], d, H * hd, dtype),
+            "wif": dense_init(ks[3], d, 2 * H, dtype),
+            "fb": jnp.full((H,), 3.0, jnp.float32),     # forget-gate bias
+            "norm": jnp.ones((H * hd,), dtype),
+            "wo": dense_init(ks[5], H * hd, d, dtype)}
+
+
+def _gates(p, x, cfg):
+    H = cfg.n_heads
+    g = (x @ p["wif"]).astype(jnp.float32)
+    ig, fg = jnp.split(g, 2, axis=-1)                   # (B,S,H)
+    logf = -jax.nn.softplus(-(fg + p["fb"]))            # log sigmoid
+    return ig, logf
+
+
+def mlstm_apply(p, x, cfg, *, chunk: int = 128):
+    """Chunked parallel mLSTM. x: (B,S,d)."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = constrain((x @ p["wq"]).reshape(B, S, H, hd) * hd ** -0.5,
+                  "dp", None, None, "tp")
+    k = constrain((x @ p["wk"]).reshape(B, S, H, hd) * hd ** -0.5,
+                  "dp", None, None, "tp")
+    v = constrain((x @ p["wv"]).reshape(B, S, H, hd), "dp", None, None, None)
+    ig, logf = _gates(p, x, cfg)
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nC = S // Q
+
+    def rsh(t):
+        return jnp.moveaxis(t.reshape(B, nC, Q) if t.ndim == 2 else
+                            t.reshape((B, nC, Q) + t.shape[2:]), 1, 0)
+
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def per_chunk(carry, inp):
+        # Stabilised chunked linear-attention recurrence. C_prev/n_prev are
+        # pre-scaled by exp(m_prev): true state = exp(m_prev)·(C_prev, n_prev).
+        C_prev, n_prev, m_prev = carry
+        qc, kc, vc, igc, lfc = inp                      # (B,Q,H,*) / (B,Q,H)
+        qf, kf, vf = (t.astype(jnp.float32) for t in (qc, kc, vc))
+        cum = jnp.cumsum(lfc, axis=1)                   # (B,Q,H) log decay
+        total = cum[:, -1]                              # (B,H)
+        # log-weights: intra pair (i,j≤i): cum_i - cum_j + ig_j;
+        #              carried state for query i: cum_i + m_prev
+        logw_intra = (cum[:, :, None, :] - cum[:, None, :, :] +
+                      igc[:, None, :, :])               # (B,Qi,Qj,H)
+        logw_intra = jnp.where(causal[None, :, :, None], logw_intra, -jnp.inf)
+        logw_state = cum + m_prev[:, None, :]           # (B,Q,H)
+        m_q = jnp.maximum(jnp.max(logw_intra, axis=2), logw_state)
+        m_q = jnp.maximum(m_q, -30.0)                   # per-query stabiliser
+        w_intra = jnp.exp(logw_intra - m_q[:, :, None, :])
+        w_state = jnp.exp(logw_state - m_q)
+        att = jnp.einsum("bihd,bjhd->bijh", qf, kf) * w_intra
+        num = (jnp.einsum("bijh,bjhd->bihd", att, vf) +
+               jnp.einsum("bihd,bhde,bih->bihe", qf, C_prev, w_state))
+        den = (jnp.sum(att, axis=2) +
+               jnp.einsum("bihd,bhd,bih->bih", qf, n_prev, w_state))
+        y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # carry update in log-space
+        m_carry = jnp.maximum(m_prev + total,
+                              jnp.max(igc + total[:, None, :] - cum, axis=1))
+        decay = jnp.exp(m_prev + total - m_carry)       # (B,H)
+        wk_upd = jnp.exp(igc + total[:, None, :] - cum -
+                         m_carry[:, None, :])           # (B,Q,H)
+        C_new = C_prev * decay[:, :, None, None] + jnp.einsum(
+            "bjhd,bjhe,bjh->bhde", kf, vf, wk_upd)
+        n_new = n_prev * decay[:, :, None] + jnp.einsum(
+            "bjhd,bjh->bhd", kf, wk_upd)
+        return (C_new, n_new, m_carry), y
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -30.0, jnp.float32)
+    _, ys = lax.scan(per_chunk, (C0, n0, m0),
+                     (rsh(q), rsh(k), rsh(v), rsh(ig), rsh(logf)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H * hd).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["wo"]
+
+
+def mlstm_decode_init(cfg, batch: int):
+    H, hd = cfg.n_heads, cfg.hd
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -30.0, jnp.float32)}
+
+
+def mlstm_decode(p, x, state, cfg):
+    """Single-token recurrent step. x: (B,1,d)."""
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, H, hd).astype(jnp.float32) * hd ** -0.5
+    k = (x @ p["wk"]).reshape(B, H, hd).astype(jnp.float32) * hd ** -0.5
+    v = (x @ p["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    ig, logf = _gates(p, x, cfg)
+    ig, logf = ig[:, 0], logf[:, 0]                     # (B,H)
+    m_new = jnp.maximum(state["m"] + logf, ig)
+    decay = jnp.exp(state["m"] + logf - m_new)
+    inw = jnp.exp(ig - m_new)
+    C = state["C"] * decay[:, :, None, None] + \
+        jnp.einsum("bhd,bhe,bh->bhde", k, v, inw)
+    n = state["n"] * decay[:, :, None] + k * inw[:, :, None]
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))[:, :, None]
+    y = (num / jnp.maximum(den, 1.0)).reshape(B, 1, H * hd).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["wo"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {"wx": dense_init(ks[0], d, 4 * d, dtype),
+            "wh": dense_init(ks[1], d, 4 * d, dtype, scale=0.5),
+            "b": jnp.zeros((4 * d,), jnp.float32),
+            "norm": jnp.ones((d,), dtype),
+            "wo": dense_init(ks[2], d, d, dtype)}
+
+
+def slstm_step(p, xt, state, cfg):
+    """xt: (B,d). state: (c, n, h, m)."""
+    c, n, h, m = state
+    g = (xt @ p["wx"] + h.astype(xt.dtype) @ p["wh"]).astype(jnp.float32) + \
+        p["b"]
+    i, f, z, o = jnp.split(g, 4, axis=-1)
+    m_new = jnp.maximum(f + m, i)                        # stabiliser state
+    ig = jnp.exp(i - m_new)
+    fg = jnp.exp(f + m - m_new)
+    c_new = fg * c + ig * jnp.tanh(z)
+    n_new = fg * n + ig
+    h_new = jax.nn.sigmoid(o) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(p, x, cfg):
+    """Full-sequence sLSTM via scan over time. x: (B,S,d)."""
+    B, S, d = x.shape
+    z0 = jnp.zeros((B, d), jnp.float32)
+    m0 = jnp.full((B, d), -30.0, jnp.float32)
+
+    def step(state, xt):
+        new = slstm_step(p, xt, state, cfg)
+        return new, new[2]
+
+    _, hs = lax.scan(step, (z0, z0, z0, m0), jnp.moveaxis(x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["wo"]
+
+
+def slstm_decode_init(cfg, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -30.0,
+                                                  jnp.float32)}
+
+
+def slstm_decode(p, x, state, cfg):
+    st = (state["c"], state["n"], state["h"], state["m"])
+    c, n, h, m = slstm_step(p, x[:, 0], st, cfg)
+    y = rmsnorm(h.astype(x.dtype), p["norm"], cfg.norm_eps)[:, None, :]
+    return y @ p["wo"], {"c": c, "n": n, "h": h, "m": m}

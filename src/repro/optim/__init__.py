@@ -1,0 +1,6 @@
+from repro.optim.adamw import (adamw_init, adamw_update, lr_schedule,
+                               global_norm, clip_by_global_norm)
+from repro.optim.compress import (compressed_psum_int8, ef_state_init)
+
+__all__ = ["adamw_init", "adamw_update", "lr_schedule", "global_norm",
+           "clip_by_global_norm", "compressed_psum_int8", "ef_state_init"]

@@ -1,0 +1,80 @@
+"""Activation sharding constraints (GSPMD hints inside model code).
+
+Model code calls ``constrain(x, "dp", None, "tp", None)`` with logical axis
+tags; if a sharding context is active (set by the launch layer), this becomes
+``lax.with_sharding_constraint`` with the mesh axes resolved and
+non-divisible dims dropped. Without a context it is a no-op, so unit tests
+and single-device runs are untouched.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+def set_context(mesh: Optional[Mesh], data_axes: Tuple[str, ...] = ("pod",
+                                                                    "data"),
+                model_axis: str = "model"):
+    _ctx.mesh = mesh
+    _ctx.dp = tuple(a for a in data_axes
+                    if mesh is not None and a in mesh.axis_names)
+    _ctx.tp = model_axis if (mesh is not None and
+                             model_axis in mesh.axis_names) else None
+
+
+def clear_context():
+    _ctx.mesh = None
+
+
+def _axis_size(mesh, ax):
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def constrain(x, *tags):
+    """tags: 'dp' (batch axes), 'tp' (model axis), or None per dim."""
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None:
+        return x
+    dims = []
+    for dim, tag in zip(x.shape, tags):
+        ax = {"dp": _ctx.dp or None, "tp": _ctx.tp}.get(tag) \
+            if tag is not None else None
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        dims.append(ax)
+    spec = P(*dims)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_expert_hidden(h):
+    """MoE (E, B, S, f) hidden: experts on TP when divisible, else f on TP."""
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None:
+        return h
+    tp = _ctx.tp
+    if tp is not None and h.shape[0] % _axis_size(mesh, tp) == 0:
+        return constrain(h, "tp", "dp", None, None)
+    return constrain(h, None, "dp", None, "tp")
+
+
+def group_count(batch: int) -> int:
+    """Largest data-shard count dividing ``batch`` (1 without a context)."""
+    mesh = getattr(_ctx, "mesh", None)
+    if mesh is None:
+        return 1
+    g = _axis_size(mesh, _ctx.dp or None)
+    while g > 1 and batch % g:
+        g //= 2
+    return max(g, 1)

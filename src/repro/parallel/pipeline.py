@@ -1,0 +1,57 @@
+"""GPipe-style pipeline parallelism over a ``stage`` mesh axis.
+
+Off by default on the production mesh (≤80-layer models are TP/FSDP-friendly
+at 512 chips); this is the >16k-chip scaling escape hatch. Microbatches
+stream through the stages via collective_permute (shard_map + ppermute) —
+M + S - 1 ticks for M microbatches over S stages, the classic GPipe bubble.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def gpipe(stage_fn: Callable, stage_params, x_micro: jnp.ndarray,
+          mesh: Mesh, axis: str = "stage"):
+    """Run ``stage_fn(params_s, x)`` over S pipeline stages.
+
+    stage_params: pytree with leading dim S (one slice per stage).
+    x_micro: (M, Bm, ...) microbatches. Returns (M, Bm, ...) outputs after
+    all S stages.
+    """
+    S = mesh.shape[axis]
+    M = x_micro.shape[0]
+    T = M + S - 1
+
+    def local(p_stack, xs):
+        p_s = jax.tree.map(lambda t: t[0], p_stack)       # this stage's slice
+        s = lax.axis_index(axis)
+        buf = jnp.zeros_like(xs[0])
+        outs = jnp.zeros_like(xs)
+
+        def tick(carry, t):
+            buf, outs = carry
+            inject = xs[jnp.clip(t, 0, M - 1)]
+            cur = jnp.where(s == 0, inject, buf)
+            active = (t - s >= 0) & (t - s < M)           # bubble mask
+            y = stage_fn(p_s, cur)
+            y = jnp.where(active, y, cur)
+            nxt = lax.ppermute(y, axis,
+                               [(i, (i + 1) % S) for i in range(S)])
+            oidx = jnp.clip(t - (S - 1), 0, M - 1)
+            write = (s == S - 1) & (t >= S - 1)
+            outs = outs.at[oidx].set(jnp.where(write, y, outs[oidx]))
+            return (nxt, outs), None
+
+        (_, outs), _ = lax.scan(tick, (buf, outs), jnp.arange(T))
+        return outs[None]                                  # (1, M, Bm, ...)
+
+    res = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis), P()), out_specs=P(axis),
+        check_vma=False)(stage_params, x_micro)
+    return res[-1]                                         # last stage's outs

@@ -1,0 +1,168 @@
+"""Parameter/activation sharding rules (TP + FSDP + EP + SP).
+
+Name-based rules map every parameter leaf to a PartitionSpec on the
+production mesh axes. Leading stacked-layer dims are always replicated
+(None-prefixed). Dims that don't divide the mesh axis fall back to None —
+so the same rules work on the 2-device test mesh and the 512-chip pod mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ShardingConfig
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fit(spec_dims, shape, mesh) -> P:
+    """Drop axis assignments that don't divide the dim size."""
+    out = []
+    for dim, ax in zip(shape, spec_dims):
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        out.append(ax)
+    return P(*out)
+
+
+# base rules: last-key-name -> (spec for the *trailing* dims of the leaf)
+def _base_rule(path: Tuple[str, ...], shape, sc: ShardingConfig,
+               zero: bool = False):
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    tp = sc.model_axis or None          # "" → pure-FSDP mode (no TP)
+    fs = (sc.fsdp_axis or None) if (sc.fsdp_params or zero) else None
+    # --- embeddings / norms ------------------------------------------------
+    if name == "embed":
+        return (tp, fs)                       # vocab on TP, d on FSDP
+    if "norm" in name or name in ("b", "fb", "conv_b", "dt_bias",
+                                  "A_log", "D"):
+        return (None,) * len(shape)
+    # --- MoE ---------------------------------------------------------------
+    if parent == "moe" or (len(path) > 1 and "moe" in path):
+        if name == "router":
+            return (fs, None)
+        mode = sc.expert_mode
+        # auto-fallback: an expert count that doesn't divide the TP axis
+        # would silently replicate the expert einsums — shard f instead.
+        if mode == "expert" and name in ("wi", "wg", "wo") and tp is not None:
+            if shape and shape[0] % _AXIS_HINT.get(tp, 16) != 0:
+                mode = "ffn"
+        # Expert PARAMS skip FSDP on the contraction dim: the expert einsums
+        # run inside seq-chunk scans, and a d-sharded weight would be
+        # re-all-gathered every chunk (measured: 6-10x collective blowup).
+        # Optimizer state (zero=True) keeps the FSDP shard — ZeRO-1.
+        efs = fs if zero else None
+        if mode == "expert":
+            return {"wi": (tp, efs, None), "wg": (tp, efs, None),
+                    "wo": (tp, None, efs)}.get(name, (None,) * len(shape))
+        return {"wi": (None, efs, tp), "wg": (None, efs, tp),
+                "wo": (None, tp, efs)}.get(name, (None,) * len(shape))
+    # --- attention / generic projections ------------------------------------
+    if name in ("wq", "wk", "wv", "wi", "wg", "wif", "wx", "wh", "in_proj"):
+        return (fs, tp)
+    if name in ("wo", "out_proj"):
+        return (tp, fs)
+    if name in ("bq", "bk", "bv"):
+        return (tp,)
+    if name == "conv_w":
+        return (None, tp)
+    if name == "router":
+        return (fs, None)
+    return (None,) * len(shape)
+
+
+_AXIS_HINT = {}  # axis name -> size, set per-call by param_specs
+
+
+def _leaf_spec(path, leaf, sc: ShardingConfig, mesh: Mesh,
+               zero: bool = False) -> P:
+    shape = leaf.shape
+    names = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    base = _base_rule(names, shape, sc, zero=zero)
+    base = tuple(base)
+    # prefix None for stacked layer dims
+    extra = len(shape) - len(base)
+    if extra > 0:
+        dims = (None,) * extra + base
+    else:
+        dims = base[-len(shape):] if shape else ()
+    return _fit(dims, shape, mesh)
+
+
+def param_specs(params, sc: ShardingConfig, mesh: Mesh, zero: bool = False):
+    """Pytree of PartitionSpec matching ``params``. zero=True: optimizer-
+    state layout (always FSDP-sharded — ZeRO-1 even where params are not)."""
+    _AXIS_HINT.clear()
+    _AXIS_HINT.update({a: mesh.shape[a] for a in mesh.axis_names})
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_leaf_spec(path, leaf, sc, mesh, zero=zero)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params, sc: ShardingConfig, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params, sc, mesh))
+
+
+def batch_spec(batch_shape_tree, sc: ShardingConfig, mesh: Mesh):
+    """Batch dims shard over the data axes; axes are dropped (innermost
+    first) until the batch size divides — so a 32-request prefill shards
+    over (pod, data) even when training shards over (pod, data, model)."""
+    dp_all = tuple(a for a in sc.data_axes if a in mesh.axis_names)
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        dp = dp_all
+        while dp and leaf.shape[0] % _axis_size(mesh, dp) != 0:
+            dp = dp[:-1]
+        return P(dp if dp else None, *([None] * (nd - 1)))
+
+    return jax.tree.map(one, batch_shape_tree)
+
+
+def cache_specs(cache, sc: ShardingConfig, mesh: Mesh):
+    """Decode caches: batch over data axes, kv-heads over TP when divisible;
+    with shard_kv_seq, the sequence dim shards over 'data' instead (SP)."""
+    dp = tuple(a for a in sc.data_axes if a in mesh.axis_names)
+    tp = sc.model_axis
+
+    def one(path, leaf):
+        shape = leaf.shape
+        names = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path)
+        if "mamba" in names:
+            if "S" in names:          # (L, B, H, N, hd)
+                return _fit((None, dp, tp, None, None), shape, mesh)
+            return _fit((None, dp, None, tp), shape, mesh)   # conv state
+        if "mlstm" in names:          # (ng, k-1, B, H, ...) matrix memory
+            dims = (None, None, dp, tp) + (None,) * (len(shape) - 4)
+            return _fit(dims, shape, mesh)
+        if "slstm" in names:          # (ng, B, d)
+            return _fit((None, dp, tp), shape, mesh)
+        # attention K/V caches: (L, B, W, K, hd)
+        if len(shape) == 5:
+            if sc.shard_kv_seq:
+                dp_sp = tuple(a for a in (dp or ()) if a != "data") or None
+                return _fit((None, dp_sp, "data", None, None), shape, mesh)
+            return _fit((None, dp, None, tp, None), shape, mesh)
+        if len(shape) >= 2:
+            return _fit((None, dp) + (None,) * (len(shape) - 2), shape, mesh)
+        return P(*([None] * len(shape)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])

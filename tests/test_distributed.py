@@ -1,0 +1,210 @@
+"""Multi-device tests (subprocess with 8 forced host devices each).
+
+These run the real collectives (all_gather / all_to_all / psum / ppermute)
+on a CPU device mesh — the same code paths the 512-chip pod uses.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(body: str, devices: int = 8) -> str:
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count={devices}"
+        import sys; sys.path.insert(0, {REPO + "/src"!r})
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+    """) + textwrap.dedent(body)
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_sample_sort_8dev():
+    out = _run("""
+        from repro.core.distributed import sample_sort
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(0)
+        n = 8 * 2048
+        x = rng.integers(-10**6, 10**6, n).astype(np.int32)
+        xs = jax.device_put(jnp.array(x), NamedSharding(mesh, P("data")))
+        res = sample_sort(xs, mesh, axis="data", w=16)
+        vals = np.array(res.values).reshape(8, -1)
+        cnts = np.array(res.count)
+        assert not np.array(res.overflow).any()
+        out = np.concatenate([vals[i][:cnts[i]] for i in range(8)])
+        assert (out == np.sort(x)[::-1]).all()
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    """One train step on a 2x4 mesh == the same step on 1 device."""
+    out = _run("""
+        import jax, dataclasses
+        from repro.configs import get_config
+        from repro.launch.steps import make_train_step
+        from repro.models.config import ShardingConfig, TrainConfig
+        from repro.optim.adamw import adamw_init
+        from repro.parallel.sharding import param_shardings, batch_spec
+        from repro.parallel.act import set_context
+        from jax.sharding import NamedSharding
+
+        cfg = get_config("qwen3_1p7b").reduced()
+        tcfg = TrainConfig(global_batch=8, seq_len=64, total_steps=10,
+                           warmup_steps=2)
+        model, step = make_train_step(cfg, tcfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        from repro.data.pipeline import SyntheticLM
+        batch = SyntheticLM(cfg.vocab_size, 64, 8).batch(0)
+
+        # single device
+        p1, o1, m1 = jax.jit(step)(params, opt, batch)
+
+        # sharded
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        sc = ShardingConfig()
+        psh = param_shardings(params, sc, mesh)
+        bspec = batch_spec(batch, sc, mesh)
+        bsh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspec)
+        params_s = jax.device_put(params, psh)
+        from jax.sharding import PartitionSpec
+        osh = type(opt)(NamedSharding(mesh, PartitionSpec()),
+                        param_shardings(opt.m, sc, mesh),
+                        param_shardings(opt.v, sc, mesh),
+                        param_shardings(opt.master, sc, mesh))
+        opt_s = jax.device_put(opt, osh)
+        batch_s = jax.device_put(batch, bsh)
+        set_context(mesh)
+        with jax.set_mesh(mesh):
+            p2, o2, m2 = jax.jit(step)(params_s, opt_s, batch_s)
+        l1, l2 = float(m1["loss"]), float(m2["loss"])
+        assert abs(l1 - l2) < 5e-3, (l1, l2)
+        d = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                      b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        assert d < 5e-3, d
+        print("OK", l1, l2, d)
+    """)
+    assert "OK" in out
+
+
+def test_compressed_psum_int8():
+    out = _run("""
+        from repro.optim.compress import compressed_psum_int8
+        mesh = jax.make_mesh((8,), ("pod",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(0)
+        # different gradient per member; mean must match fp32 mean within
+        # one int8 quantisation step (error feedback holds the residual)
+        gs_np = rng.standard_normal((8, 16, 32)).astype(np.float32)
+        gs = jax.device_put(jnp.array(gs_np),
+                            NamedSharding(mesh, P("pod")))
+
+        def local(gsh, ef):
+            mean, ef2 = compressed_psum_int8({"w": gsh[0]}, {"w": ef[0]},
+                                             "pod")
+            return mean["w"][None], ef2["w"][None]
+
+        ef0 = jax.device_put(jnp.zeros((8, 16, 32), jnp.float32),
+                             NamedSharding(mesh, P("pod")))
+        mean, ef = jax.shard_map(
+            local, mesh=mesh, in_specs=(P("pod"), P("pod")),
+            out_specs=(P("pod"), P("pod")), check_vma=False)(gs, ef0)
+        mean = np.array(mean)[0]
+        exp = gs_np.mean(axis=0)
+        tol = np.abs(gs_np).max(axis=(1, 2)).mean() / 127
+        err = np.max(np.abs(mean - exp))
+        assert err <= tol * 1.5, (err, tol)
+        # error feedback: residuals stored per member
+        assert np.array(ef).shape == (8, 16, 32)
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_sharded_flash_decode_matches_dense():
+    """SP flash-decode over a seq-sharded cache == unsharded attention."""
+    out = _run("""
+        from repro.configs import get_config
+        from repro.models.attention import (attn_decode, attn_init)
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        cfg = get_config("qwen3_1p7b").reduced()
+        p = attn_init(jax.random.PRNGKey(0), cfg)
+        B, W = 2, 64
+        K, hd = cfg.n_kv_heads, cfg.hd
+        rng = np.random.default_rng(0)
+        kc = jnp.array(rng.standard_normal((B, W, K, hd)), jnp.float32)
+        vc = jnp.array(rng.standard_normal((B, W, K, hd)), jnp.float32)
+        x = jnp.array(rng.standard_normal((B, 1, cfg.d_model)), jnp.float32)
+        pos = jnp.array([40, 50], jnp.int32)
+        y1, _ = attn_decode(p, x, (kc, vc), pos, cfg)
+        with jax.set_mesh(mesh):
+            y2, _ = jax.jit(lambda x, kc, vc, pos: attn_decode(
+                p, x, (kc, vc), pos, cfg, mesh=mesh,
+                kv_shard_axis="data"))(x, kc, vc, pos)
+        d = float(jnp.max(jnp.abs(y1 - y2)))
+        assert d < 1e-3, d
+        print("OK", d)
+    """)
+    assert "OK" in out
+
+
+def test_pmt_tree_on_mesh():
+    """PMT levels vmapped over a device mesh (fig.1 as a sharded reduction)."""
+    out = _run("""
+        from repro.core.merge_tree import pmt_merge
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(3)
+        rows = np.sort(rng.integers(-999, 999, (8, 512)).astype(np.int32),
+                       axis=1)[:, ::-1].copy()
+        xs = jax.device_put(jnp.array(rows), NamedSharding(mesh, P("data")))
+        with jax.set_mesh(mesh):
+            got = np.array(jax.jit(lambda r: pmt_merge(r, w=16))(xs))
+        assert (got == np.sort(rows.reshape(-1))[::-1]).all()
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_gpipe_matches_sequential():
+    """GPipe over 4 stages == sequentially applying the 4 stage functions."""
+    out = _run("""
+        from repro.parallel.pipeline import gpipe
+        mesh = jax.make_mesh((4,), ("stage",),
+                             axis_types=(jax.sharding.AxisType.Auto,),
+                             devices=jax.devices()[:4])
+        rng = np.random.default_rng(0)
+        S, M, Bm, d = 4, 6, 8, 16
+        Ws = jnp.array(rng.standard_normal((S, d, d)) * 0.3, jnp.float32)
+        xs = jnp.array(rng.standard_normal((M, Bm, d)), jnp.float32)
+
+        def stage_fn(W, x):
+            return jnp.tanh(x @ W)
+
+        with jax.set_mesh(mesh):
+            got = jax.jit(lambda Ws, xs: gpipe(stage_fn, Ws, xs, mesh,
+                                               "stage"))(Ws, xs)
+        exp = xs
+        for s in range(S):
+            exp = jnp.tanh(exp @ Ws[s])
+        d_ = float(jnp.max(jnp.abs(got - exp)))
+        assert d_ < 1e-5, d_
+        print("OK", d_)
+    """)
+    assert "OK" in out

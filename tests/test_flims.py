@@ -1,0 +1,177 @@
+"""FLiMS core correctness: unit + property tests against the paper's claims.
+
+Covers: algorithm 1 (plain), algorithm 2 (skew), algorithm 3 (stable),
+proof §5.1 (banked == sorted-space == oracle), §6 (no tie-record issue),
+and the butterfly/bitonic networks.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (basic_merge, bitonic_sort, butterfly_sort,
+                        flims_merge, flims_merge_banked,
+                        flims_merge_kv_stable, flims_merge_ref, mms_merge,
+                        wms_merge)
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _sorted_desc(vals):
+    return np.sort(np.asarray(vals, np.int32))[::-1].copy()
+
+
+sorted_list = st.lists(st.integers(-1000, 1000), min_size=0, max_size=300)
+w_values = st.sampled_from([2, 4, 8, 16, 32])
+
+
+@given(sorted_list, sorted_list, w_values)
+def test_merge_ref_matches_oracle(a, b, w):
+    a, b = _sorted_desc(a), _sorted_desc(b)
+    exp = np.sort(np.concatenate([a, b]))[::-1]
+    got = np.array(flims_merge_ref(jnp.array(a), jnp.array(b), w))
+    np.testing.assert_array_equal(got, exp)
+
+
+@given(sorted_list, sorted_list, w_values)
+def test_merge_banked_matches_oracle(a, b, w):
+    a, b = _sorted_desc(a), _sorted_desc(b)
+    exp = np.sort(np.concatenate([a, b]))[::-1]
+    got = np.array(flims_merge_banked(jnp.array(a), jnp.array(b), w))
+    np.testing.assert_array_equal(got, exp)
+
+
+@given(sorted_list, sorted_list, w_values)
+def test_merge_skew_variant(a, b, w):
+    """Algorithm 2 must stay correct on arbitrary (incl. duplicate) data."""
+    a, b = _sorted_desc(a), _sorted_desc(b)
+    exp = np.sort(np.concatenate([a, b]))[::-1]
+    got = np.array(flims_merge_banked(jnp.array(a), jnp.array(b), w,
+                                      tie="skew"))
+    np.testing.assert_array_equal(got, exp)
+
+
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=200),
+       st.lists(st.integers(0, 3), min_size=1, max_size=200),
+       st.sampled_from([4, 8, 16]))
+def test_skew_balances_dequeues(a, b, w):
+    """§4.1: on duplicate-heavy data the skew variant must dequeue from both
+    inputs at a more balanced rate than plain FLiMS."""
+    a, b = _sorted_desc(a), _sorted_desc(b)
+    n = min(len(a), len(b))
+    if n < 4 * w:
+        return
+    plain = flims_merge_banked(jnp.array(a), jnp.array(b), w, tie="b",
+                               with_stats=True)
+    skew = flims_merge_banked(jnp.array(a), jnp.array(b), w, tie="skew",
+                              with_stats=True)
+    # dequeue-RATE imbalance over 4-cycle windows (ties alternate whole rows)
+    cyc = n // w
+
+    def imb(ks):
+        kk = ks[:cyc - cyc % 4].astype(jnp.float32)
+        if kk.shape[0] < 4:
+            return 0.0
+        return float(jnp.mean(jnp.abs(kk.reshape(-1, 4).mean(1) - w / 2)))
+
+    assert imb(skew.k_per_cycle) <= imb(plain.k_per_cycle) + 1e-6
+
+
+@given(st.lists(st.integers(0, 5), min_size=0, max_size=150),
+       st.lists(st.integers(0, 5), min_size=0, max_size=150),
+       st.sampled_from([2, 4, 8, 16]))
+def test_stable_merge_payload_integrity(a, b, w):
+    """Algorithm 3 + §6 tie-record claim: payloads must stay attached to
+    their keys and duplicates must keep (A-first, original-order) priority."""
+    ka, kb = _sorted_desc(a), _sorted_desc(b)
+    va = np.arange(len(ka), dtype=np.int32)
+    vb = 10_000 + np.arange(len(kb), dtype=np.int32)
+    mk, mv = flims_merge_kv_stable(jnp.array(ka), {"v": jnp.array(va)},
+                                   jnp.array(kb), {"v": jnp.array(vb)}, w)
+    mk, mv = np.array(mk), np.array(mv["v"])
+    # python reference stable merge (descending, A first on equal keys)
+    out = []
+    ia = ib = 0
+    while ia < len(ka) or ib < len(kb):
+        if ib >= len(kb) or (ia < len(ka) and ka[ia] >= kb[ib]):
+            out.append((ka[ia], va[ia])); ia += 1
+        else:
+            out.append((kb[ib], vb[ib])); ib += 1
+    np.testing.assert_array_equal(mk, [o[0] for o in out])
+    np.testing.assert_array_equal(mv, [o[1] for o in out])
+
+
+@given(sorted_list, sorted_list, st.sampled_from([4, 8, 16]))
+def test_baseline_mergers_match(a, b, w):
+    """The paper's comparison set produces identical merges (§6)."""
+    a, b = _sorted_desc(a), _sorted_desc(b)
+    exp = np.sort(np.concatenate([a, b]))[::-1]
+    for fn in (basic_merge, mms_merge, wms_merge):
+        got = np.array(fn(jnp.array(a), jnp.array(b), w))
+        np.testing.assert_array_equal(got, exp, err_msg=fn.__name__)
+
+
+@given(st.lists(st.floats(-1e6, 1e6, allow_nan=False, width=32,
+                          allow_subnormal=False),  # XLA CPU flushes denormals
+                min_size=0, max_size=200), w_values)
+def test_merge_floats(a, w):
+    a = np.sort(np.asarray(a, np.float32))[::-1].copy()
+    b = a[::2].copy()
+    exp = np.sort(np.concatenate([a, b]))[::-1]
+    got = np.array(flims_merge(jnp.array(a), jnp.array(b), w=w))
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_merge_ascending():
+    a = np.array([1, 3, 5], np.int32)
+    b = np.array([2, 2, 9], np.int32)
+    got = np.array(flims_merge(jnp.array(a), jnp.array(b), w=4,
+                               descending=False))
+    np.testing.assert_array_equal(got, [1, 2, 2, 3, 5, 9])
+
+
+@given(st.integers(1, 6))
+def test_butterfly_sorts_rotated_bitonic(logw):
+    """Proof §5.1(2): the CAS network sorts any *rotated* bitonic sequence."""
+    w = 2 ** logw
+    rng = np.random.default_rng(logw)
+    up = np.sort(rng.integers(-50, 50, w // 2))
+    down = np.sort(rng.integers(-50, 50, w - w // 2))[::-1]
+    bitonic = np.concatenate([down, up])          # one max, one min
+    for rot in range(0, w, max(w // 4, 1)):
+        x = np.roll(bitonic, rot)
+        got = np.array(butterfly_sort(jnp.array(x)))
+        np.testing.assert_array_equal(got, np.sort(bitonic)[::-1],
+                                      err_msg=f"rot={rot}")
+
+
+@given(st.lists(st.integers(-99, 99), min_size=1, max_size=64))
+def test_bitonic_sort_network(vals):
+    w = 1
+    while w < len(vals):
+        w *= 2
+    x = np.array(vals + [-(10 ** 6)] * (w - len(vals)), np.int32)
+    got = np.array(bitonic_sort(jnp.array(x)))
+    np.testing.assert_array_equal(got, np.sort(x)[::-1])
+
+
+def test_merge_empty_inputs():
+    e = jnp.zeros((0,), jnp.int32)
+    a = jnp.array([5, 3, 1], jnp.int32)
+    np.testing.assert_array_equal(np.array(flims_merge_ref(a, e, 4)),
+                                  [5, 3, 1])
+    np.testing.assert_array_equal(np.array(flims_merge_ref(e, a, 4)),
+                                  [5, 3, 1])
+    assert flims_merge_ref(e, e, 4).shape == (0,)
+
+
+def test_merge_extreme_values():
+    """Sentinel handling: data containing the dtype minimum still merges."""
+    lo = np.iinfo(np.int32).min
+    a = np.array([7, lo, lo], np.int32)
+    b = np.array([9, 0, lo], np.int32)
+    exp = np.sort(np.concatenate([a, b]))[::-1]
+    got = np.array(flims_merge_ref(jnp.array(a), jnp.array(b), 4))
+    np.testing.assert_array_equal(got, exp)

@@ -1,0 +1,91 @@
+"""Pallas kernels: shape/dtype sweeps against the pure-jnp ref.py oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.bitonic_sort import sort_chunks_pallas
+from repro.kernels.flims_merge import flims_merge_pallas, _corank
+from repro.kernels.ops import kernel_sort, merge, sort_rows
+from repro.kernels.ref import merge_ref, sort_rows_ref
+
+RNG = np.random.default_rng(7)
+
+
+def _desc(x):
+    return np.sort(x)[::-1].copy()
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+@pytest.mark.parametrize("w", [8, 32, 128])
+@pytest.mark.parametrize("nA,nB", [(0, 10), (1, 1), (100, 3000), (2048, 2048),
+                                   (5000, 1)])
+def test_merge_kernel_sweep(dtype, w, nA, nB):
+    if dtype == np.int32:
+        a = _desc(RNG.integers(-10**6, 10**6, nA).astype(dtype))
+        b = _desc(RNG.integers(-10**6, 10**6, nB).astype(dtype))
+    else:
+        a = _desc(RNG.standard_normal(nA).astype(dtype))
+        b = _desc(RNG.standard_normal(nB).astype(dtype))
+    got = np.array(flims_merge_pallas(jnp.array(a), jnp.array(b), w=w,
+                                      block_out=1024))
+    exp = np.array(merge_ref(jnp.array(a), jnp.array(b)))
+    np.testing.assert_array_equal(got, exp)
+
+
+@pytest.mark.parametrize("block_out", [128, 512, 4096])
+def test_merge_kernel_partition_boundaries(block_out):
+    """Merge-path partitioning: results identical for any grid split, incl.
+    duplicate values crossing partition boundaries."""
+    a = _desc(RNG.choice([1, 2, 3], 3000).astype(np.int32))
+    b = _desc(RNG.choice([1, 2, 3], 2000).astype(np.int32))
+    got = np.array(flims_merge_pallas(jnp.array(a), jnp.array(b), w=32,
+                                      block_out=block_out))
+    exp = np.array(merge_ref(jnp.array(a), jnp.array(b)))
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_corank_invariant():
+    """aStart + bStart = g·C and (lA + lB) ≡ 0 (mod w) at every boundary."""
+    a = jnp.array(_desc(RNG.integers(-99, 99, 1000).astype(np.int32)))
+    b = jnp.array(_desc(RNG.integers(-99, 99, 1500).astype(np.int32)))
+    w, C = 16, 256
+    for g in range(10):
+        o = jnp.int32(g * C)
+        acut = int(_corank(o, a, b))
+        bcut = g * C - acut
+        assert 0 <= acut <= 1000 and 0 <= bcut <= 1500
+        assert (acut % w + bcut % w) % w == 0
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+@pytest.mark.parametrize("m,c", [(1, 8), (4, 64), (16, 512), (7, 128)])
+def test_sort_chunks_kernel_sweep(dtype, m, c):
+    if dtype == np.int32:
+        x = RNG.integers(-10**6, 10**6, (m, c)).astype(dtype)
+    else:
+        x = RNG.standard_normal((m, c)).astype(dtype)
+    got = np.array(sort_chunks_pallas(jnp.array(x)))
+    exp = np.array(sort_rows_ref(jnp.array(x)))
+    np.testing.assert_array_equal(got, exp)
+
+
+@pytest.mark.parametrize("n", [1, 17, 1000, 4096, 10000])
+def test_kernel_sort_end_to_end(n):
+    x = RNG.integers(-10**6, 10**6, n).astype(np.int32)
+    got = np.array(kernel_sort(jnp.array(x), chunk=256, w=64))
+    np.testing.assert_array_equal(got, np.sort(x)[::-1])
+
+
+def test_kernel_sort_ascending():
+    x = RNG.standard_normal(500).astype(np.float32)
+    got = np.array(kernel_sort(jnp.array(x), descending=False))
+    np.testing.assert_array_equal(got, np.sort(x))
+
+
+def test_merge_wrapper_dispatch():
+    a = jnp.array(_desc(RNG.integers(0, 100, 300).astype(np.int32)))
+    b = jnp.array(_desc(RNG.integers(0, 100, 200).astype(np.int32)))
+    got = np.array(merge(a, b, w=32))
+    exp = np.array(merge_ref(a, b))
+    np.testing.assert_array_equal(got, exp)

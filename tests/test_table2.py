@@ -1,0 +1,94 @@
+"""Paper Table 2: comparator counts and pipeline depths.
+
+Analytic formulas asserted exactly; FLiMS's advantage additionally verified
+*empirically* by counting comparison ops in the jaxprs of our functional
+merger implementations (a MAX op over w lanes = w comparators; each CAS
+stage's max op over w/2 lanes = w/2 comparators).
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (comparators_basic, comparators_ehms,
+                        comparators_flims, comparators_flimsj,
+                        comparators_mms, comparators_pmt, comparators_wms,
+                        pipeline_depth)
+from repro.core.butterfly import butterfly_sort, bitonic_merge_full
+
+
+@pytest.mark.parametrize("w", [4, 8, 16, 32, 64, 128, 256, 512])
+def test_table2_formulas(w):
+    lg = int(math.log2(w))
+    assert comparators_flims(w) == w + (w // 2) * lg
+    assert comparators_flimsj(w) == comparators_flims(w)
+    assert comparators_basic(w) == w + w * lg
+    assert comparators_pmt(w) == comparators_flims(w)
+    assert comparators_mms(w) == 2 * w + w * lg + 1
+    assert comparators_wms(w) == 3 * w + (w // 2) * lg
+    assert comparators_ehms(w) == (5 * w) // 2 + (w // 2) * lg + 2
+    # FLiMS strictly fewest among feedback-less designs (w >= 2)
+    assert comparators_flims(w) < comparators_mms(w)
+    assert comparators_flims(w) < comparators_wms(w)
+    assert comparators_flims(w) < comparators_ehms(w)
+    assert comparators_flims(w) < comparators_basic(w)
+
+
+@pytest.mark.parametrize("w", [4, 16, 64])
+def test_table2_latency(w):
+    lg = int(math.log2(w))
+    assert pipeline_depth("flims", w) == lg + 1          # least
+    assert pipeline_depth("flimsj", w) == lg + 2
+    assert pipeline_depth("wms", w) == lg + 3
+    assert pipeline_depth("mms", w) == 2 * lg + 3
+    for d in ("basic", "pmt", "mms", "vms", "wms", "ehms", "flimsj"):
+        assert pipeline_depth("flims", w) < pipeline_depth(d, w)
+
+
+def _count_comparators(fn, *args):
+    """Comparator count = total lanes of comparison ops in the jaxpr: the MAX
+    selector lowers to `max` (w lanes), each CAS stage lowers to one `gt`
+    over its w/2 comparator lanes."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    total = 0
+
+    def walk(jx):
+        nonlocal total
+        for eqn in jx.eqns:
+            if eqn.primitive.name in ("max", "gt"):
+                total += int(np.prod(eqn.outvars[0].aval.shape))
+            for sub in eqn.params.values():
+                if hasattr(sub, "jaxpr"):
+                    walk(sub.jaxpr)
+                elif isinstance(sub, (list, tuple)):
+                    for s in sub:
+                        if hasattr(s, "jaxpr"):
+                            walk(s.jaxpr)
+
+    walk(jaxpr.jaxpr)
+    return total
+
+
+@pytest.mark.parametrize("w", [4, 8, 16, 32])
+def test_flims_cycle_comparator_count_in_jaxpr(w):
+    """One FLiMS cycle = exactly w + (w/2)·log2(w) comparators (Table 2)."""
+    def one_cycle(cA, cBr):
+        return butterfly_sort(jnp.maximum(cA, cBr))
+
+    x = jnp.zeros((w,), jnp.int32)
+    got = _count_comparators(one_cycle, x, x)
+    assert got == comparators_flims(w)
+
+
+@pytest.mark.parametrize("w", [4, 8, 16, 32])
+def test_basic_cycle_comparator_count_in_jaxpr(w):
+    """One fig.4 cycle (full 2w bitonic merger) = w + w·log2(w)."""
+    def one_cycle(x2w):
+        return bitonic_merge_full(x2w)
+
+    x = jnp.zeros((2 * w,), jnp.int32)
+    got = _count_comparators(one_cycle, x)
+    assert got == comparators_basic(w)
+    assert got > comparators_flims(w)
