@@ -1,12 +1,20 @@
-"""Framework feature: FLiMS-sorted MoE dispatch vs dense masked compute.
+"""Framework feature: MoE dispatch routed through ``repro.engine``.
 
-Derived: speedup of sorted dispatch (top-k sparse) over dense (all-experts)
-at growing expert counts — the flop-saving the §Perf MoE hillclimb exploits.
+Three comparisons, all engine-planned:
+1. dense masked compute vs sorted (dropless) dispatch — the FLOP saving;
+2. the dispatch argsort 'before' (seed behaviour: pure-JAX FLiMS argsort
+   pinned) vs 'after' (engine planner picks the backend's best variant) —
+   the win this PR's rewiring buys;
+3. ragged ``engine.segment_sort`` across its registered variants — the new
+   batched segmented kernel vs the padded-XLA fallback.
 """
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_fn
+from repro import engine
 from repro.configs import get_config
 from repro.models.moe import moe_apply_dense, moe_apply_sorted, moe_init
 
@@ -18,11 +26,52 @@ def run():
                                               n_experts_active=2)
     p = moe_init(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 256, cfg.d_model))
+    B, S, k = 4, 256, cfg.n_experts_active
+    pairs = B * S * k                       # dispatch argsort problem size
+
     jd = jax.jit(lambda x: moe_apply_dense(p, x, cfg))
-    js = jax.jit(lambda x: moe_apply_sorted(p, x, cfg))
     ud = time_fn(jd, x)
-    us_ = time_fn(js, x)
     out.append(row("moe/dense_e8k2", ud, "path=dense"))
-    out.append(row("moe/sorted_e8k2", us_,
-                   f"path=flims_sorted;speedup={ud / us_:.2f}"))
+
+    # 'before': pin the dispatch argsort to the seed's pure-JAX FLiMS variant
+    akey = engine.plan_key("argsort", n=pairs, dtype=jnp.int32)
+    engine.default_planner.put(akey, engine.Plan("flims"))
+    js_before = jax.jit(lambda x: moe_apply_sorted(p, x, cfg))
+    ub = time_fn(js_before, x)
+    out.append(row("moe/sorted_e8k2_flims_argsort", ub,
+                   f"path=sorted;argsort=flims;vs_dense={ud / ub:.2f}"))
+
+    # 'after': let the planner choose (XLA on CPU, FLiMS on TPU)
+    engine.default_planner.clear()
+    js_after = jax.jit(lambda x: moe_apply_sorted(p, x, cfg))
+    ua = time_fn(js_after, x)
+    plan = engine.default_planner.lookup(akey)
+    out.append(row("moe/sorted_e8k2_engine", ua,
+                   f"path=sorted;argsort={plan.variant if plan else 'n/a'};"
+                   f"vs_dense={ud / ua:.2f};vs_before={ub / ua:.2f}"))
+
+    # the dispatch sort in isolation: planner's variant swap, same key shape
+    e_keys = jnp.array(np.random.default_rng(2).integers(
+        0, cfg.n_experts, pairs).astype(np.int32))
+    us_by_variant = {}
+    for variant in engine.registry.variants("argsort"):
+        fn = jax.jit(lambda kk, var=variant: engine.argsort(
+            kk, descending=False, variant=var))
+        us_by_variant[variant] = time_fn(fn, e_keys)
+    for variant, us in us_by_variant.items():
+        best = min(us_by_variant.values())
+        out.append(row(f"engine/argsort_{variant}", us,
+                       f"n={pairs};vs_best={us / best:.2f}"))
+
+    # ragged segment_sort: per-expert slab shape (64 segments, ~16k values)
+    rng = np.random.default_rng(0)
+    lens = rng.integers(0, 512, 64)
+    vals = jnp.array(rng.standard_normal(int(lens.sum())).astype(np.float32))
+    offs = jnp.array(np.concatenate([[0], np.cumsum(lens)]).astype(np.int32))
+    for variant in engine.registry.variants("segment_sort"):
+        fn = jax.jit(lambda v, o, var=variant: engine.segment_sort(
+            v, o, cap=512, variant=var))
+        us = time_fn(fn, vals, offs)
+        out.append(row(f"engine/segment_sort_{variant}", us,
+                       f"S=64;N={int(lens.sum())};cap=512"))
     return out

@@ -1,25 +1,49 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (plus section comments).
+``--json out.json`` additionally records the rows as structured JSON so the
+repo can keep a ``BENCH_*.json`` perf trajectory across PRs; ``--only``
+restricts to matching sections (used by the CI smoke step).
 """
+import argparse
+import json
 import sys
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write rows as structured JSON")
+    ap.add_argument("--only", default=None,
+                    help="run only sections whose module name contains this")
+    args = ap.parse_args(argv)
+
     from benchmarks import (fig14_w_sweep, fig15_full_sort, kernel_merge,
                             merge_tree_bench, moe_dispatch, skew_balance,
                             table2_comparators)
+    sections = [(table2_comparators, "Table 2 (comparator counts)"),
+                (fig14_w_sweep, "Fig 14 (throughput vs w)"),
+                (fig15_full_sort, "Fig 15 (complete sort)"),
+                (skew_balance, "S4.1 (skewness optimisation)"),
+                (merge_tree_bench, "S2.1 (parallel merge tree)"),
+                (kernel_merge, "Pallas kernels (interpret)"),
+                (moe_dispatch, "MoE dispatch via repro.engine")]
+    if args.only:
+        sections = [(m, l) for m, l in sections if args.only in m.__name__]
+
+    records = []
     print("name,us_per_call,derived")
-    for mod, label in ((table2_comparators, "Table 2 (comparator counts)"),
-                       (fig14_w_sweep, "Fig 14 (throughput vs w)"),
-                       (fig15_full_sort, "Fig 15 (complete sort)"),
-                       (skew_balance, "S4.1 (skewness optimisation)"),
-                       (merge_tree_bench, "S2.1 (parallel merge tree)"),
-                       (kernel_merge, "Pallas kernels (interpret)"),
-                       (moe_dispatch, "MoE dispatch (framework feature)")):
+    for mod, label in sections:
         print(f"# --- {label} ---")
         for line in mod.run():
             print(line, flush=True)
+            name, us, derived = line.split(",", 2)
+            records.append({"section": label, "name": name,
+                            "us_per_call": float(us), "derived": derived})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": records}, f, indent=2)
+        print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

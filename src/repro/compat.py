@@ -1,0 +1,72 @@
+"""JAX version portability shims (0.4.x ↔ 0.5+).
+
+The codebase targets the current jax API surface (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.set_mesh``). On older runtimes
+(e.g. the 0.4.x CPU container) those spellings are missing; ``install()``
+fills exactly the gaps so every call site — library, tests, examples — runs
+unmodified on either version. Installed once from ``repro/__init__.py``; a
+no-op where jax already provides the API.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+
+import jax
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    try:
+        import inspect
+        params = inspect.signature(jax.make_mesh).parameters
+        if "axis_types" in params:
+            return
+    except (AttributeError, ValueError, TypeError):
+        return
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+        del axis_types                    # pre-0.5 meshes are implicitly Auto
+        return orig(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma)
+
+    jax.shard_map = shard_map
+
+
+def _install_set_mesh() -> None:
+    if hasattr(jax, "set_mesh"):
+        return
+    # jax.sharding.Mesh is itself a context manager on 0.4.x, so
+    # ``with jax.set_mesh(mesh):`` degrades to ``with mesh:``.
+    jax.set_mesh = lambda mesh: mesh
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_shard_map()
+    _install_set_mesh()

@@ -24,9 +24,10 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import engine
 from repro.core.flims import sentinel_for
 from repro.core.merge_tree import pmt_merge
-from repro.core.mergesort import flims_sort, _next_pow2
+from repro.core.mergesort import _next_pow2
 
 
 class ShardedSort(NamedTuple):
@@ -38,12 +39,15 @@ class ShardedSort(NamedTuple):
 def _local_pass(xl: jnp.ndarray, axis_name: str, n_dev: int, cap: int,
                 w: int) -> ShardedSort:
     n_local = xl.shape[0]
-    loc = flims_sort(xl, w=w)                        # descending local sort
+    # descending local sort through the engine (planner picks the variant;
+    # an explicit plan pins the FLiMS reference dataflow's w)
+    loc = engine.sort(xl, plan=engine.Plan("ref", w=w, chunk=512))
     # --- splitters from regular sampling -----------------------------------
     step = max(n_local // n_dev, 1)
     samples = loc[::step][:n_dev]
     allsmp = lax.all_gather(samples, axis_name).reshape(-1)      # (P*P,)
-    allsmp = flims_sort(allsmp, w=min(w, _next_pow2(allsmp.shape[0])))
+    allsmp = engine.sort(allsmp, plan=engine.Plan(
+        "ref", w=min(w, _next_pow2(allsmp.shape[0])), chunk=512))
     splitters = allsmp[::n_dev][1:n_dev]                          # (P-1,) desc
     # --- bucket boundaries: b_p = #elements strictly greater than s_p ------
     asc = loc[::-1]

@@ -54,6 +54,14 @@ def _cdiv(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 def _pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
     pad = n - x.shape[0]
     return jnp.pad(x, (0, pad), constant_values=sentinel_for(x.dtype))

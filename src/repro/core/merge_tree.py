@@ -35,15 +35,22 @@ def pmt_merge(lists: jnp.ndarray, w: int = 32) -> jnp.ndarray:
     return rows[0]
 
 
-def merge_k(arrays: Sequence[jnp.ndarray], w: int = 32) -> jnp.ndarray:
+def merge_k(arrays: Sequence[jnp.ndarray], w: int = 32,
+            dtype=None) -> jnp.ndarray:
     """Merge K descending arrays of arbitrary (unequal) lengths: HPMT-style.
 
     Python-level binary tree over jitted 2-way merges (each distinct shape
     pair compiles once; the tree has ceil(log2 K) levels like fig. 1).
+    ``dtype`` fixes the element type of the empty result when no input
+    carries one (all inputs empty or absent); defaults to float32, or to the
+    first input's dtype when any input is given.
     """
-    arrays = [jnp.asarray(a) for a in arrays if a.shape[0] > 0]
+    inputs = [jnp.asarray(a) for a in arrays]
+    if dtype is None and inputs:
+        dtype = inputs[0].dtype
+    arrays = [a for a in inputs if a.shape[0] > 0]
     if not arrays:
-        return jnp.zeros((0,), jnp.float32)
+        return jnp.zeros((0,), dtype or jnp.float32)
     while len(arrays) > 1:
         nxt = []
         for i in range(0, len(arrays) - 1, 2):
@@ -57,10 +64,21 @@ def merge_k(arrays: Sequence[jnp.ndarray], w: int = 32) -> jnp.ndarray:
 @partial(jax.jit, static_argnames=("w", "valid_is_count",))
 def pmt_merge_padded(lists: jnp.ndarray, counts: jnp.ndarray, w: int = 32,
                      valid_is_count: bool = True) -> jnp.ndarray:
-    """Merge K sentinel-padded descending rows with per-row valid ``counts``.
+    """Merge K padded descending rows with per-row validity.
 
-    Sentinels sort last, so the merged prefix of length sum(counts) is the
-    true merge — used by the distributed sample-sort exchange.
+    Sentinel contract: invalid tail positions must sort last, so the merged
+    prefix of length ``sum(counts)`` is the true merge — used by the
+    distributed sample-sort exchange. ``counts`` declares validity and is
+    *enforced* here, not trusted: positions at or beyond the valid region are
+    overwritten with the dtype's sentinel, so callers may pad rows with
+    arbitrary garbage.
+
+    valid_is_count=True: ``counts`` is (K,) int valid lengths per row.
+    valid_is_count=False: ``counts`` is a (K, n) boolean validity mask.
     """
-    del counts, valid_is_count  # sentinels already sort last
-    return pmt_merge(lists, w)
+    if valid_is_count:
+        valid = jnp.arange(lists.shape[1])[None, :] < counts[:, None]
+    else:
+        valid = counts.astype(bool)
+    masked = jnp.where(valid, lists, sentinel_for(lists.dtype))
+    return pmt_merge(masked, w)

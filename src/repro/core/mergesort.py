@@ -14,14 +14,8 @@ import jax.numpy as jnp
 
 from repro.core.butterfly import bitonic_sort
 from repro.core.flims import (flims_merge_ref, flims_merge_kv_stable,
-                              sentinel_for, _pad_to)
-
-
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+                              sentinel_for, _pad_to,
+                              next_pow2 as _next_pow2)
 
 
 @partial(jax.jit, static_argnames=("chunk",))

@@ -1,0 +1,24 @@
+"""repro.engine — batched segmented-sort/merge engine with plan cache.
+
+The single production entry point for sorting workloads (DESIGN.md §3):
+``sort`` / ``argsort`` / ``merge`` / ``topk`` over arrays, and
+``segment_sort`` / ``segment_merge`` over ragged batches, all planned by an
+autotunable variant/parameter cache.
+"""
+from repro.engine.api import (Plan, argsort, autotune, clear_plans,
+                              load_plans, merge, save_plans, segment_merge,
+                              segment_sort, sort, topk)
+from repro.engine.planner import (Planner, default_planner, heuristic_plan,
+                                  plan_key)
+from repro.engine.segments import (lengths_from_offsets, offsets_from_lengths,
+                                   pad_segments, segment_ids,
+                                   segment_sort_oracle, unpad_segments)
+from repro.engine import registry
+
+__all__ = [
+    "Plan", "Planner", "argsort", "autotune", "clear_plans", "default_planner",
+    "heuristic_plan", "lengths_from_offsets", "load_plans", "merge",
+    "offsets_from_lengths", "pad_segments", "plan_key", "registry",
+    "save_plans", "segment_ids", "segment_merge", "segment_sort",
+    "segment_sort_oracle", "sort", "topk", "unpad_segments",
+]

@@ -1,0 +1,196 @@
+"""`repro.engine` — the production entry point for every sorting workload.
+
+One facade over the whole FLiMS stack: full sorts, stable argsorts, 2-way
+merges, top-k, and — the ragged-batch capability — ``segment_sort`` /
+``segment_merge`` over flat arrays described by segment offsets (the
+MoE-dispatch / ragged-sampler shape). Each call resolves a ``Plan``
+(variant + tile parameters) through the planner's cache → table → heuristic
+chain; ``autotune`` measures the registered variants on an example workload
+and installs the winner. See DESIGN.md §3.
+
+    from repro import engine
+    y     = engine.sort(x)                       # descending
+    perm  = engine.argsort(keys, descending=False)
+    m     = engine.merge(a, b)
+    v, i  = engine.topk(logits, 16)
+    s     = engine.segment_sort(values, offsets) # ragged batch, one kernel
+    plan  = engine.autotune("segment_sort", values, offsets)
+    engine.save_plans("plans.json")
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import registry, segments
+from repro.engine.planner import (Plan, default_planner, plan_key,
+                                  heuristic_plan)
+
+__all__ = [
+    "sort", "argsort", "merge", "topk", "segment_sort", "segment_merge",
+    "autotune", "save_plans", "load_plans", "clear_plans", "Plan",
+]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def infer_key(op: str, *args):
+    """Plan-cache key for an op's example arguments."""
+    if op == "merge":
+        a, b = args[:2]
+        return plan_key(op, n=a.shape[0] + b.shape[0], dtype=a.dtype)
+    if op in ("sort", "argsort", "topk"):
+        x = args[0]
+        return plan_key(op, n=x.shape[-1], dtype=x.dtype)
+    if op == "segment_sort":
+        values, offsets = args[:2]
+        return plan_key(op, n=values.shape[0], dtype=values.dtype,
+                        segments=offsets.shape[0] - 1)
+    if op == "segment_merge":
+        a, ao, b, _bo = args[:4]
+        return plan_key(op, n=a.shape[0] + b.shape[0], dtype=a.dtype,
+                        segments=ao.shape[0] - 1)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def _resolve(op: str, plan: Optional[Plan], variant: Optional[str], *args,
+             **key_extra) -> Plan:
+    if plan is None:
+        key = infer_key(op, *args)
+        plan = default_planner.lookup(key) or heuristic_plan(op, key)
+        default_planner.put(key, plan)
+    if variant is not None:
+        plan = plan.replace(variant=variant)
+    return plan
+
+
+def run_op(op: str, plan: Plan, *args):
+    """Execute ``op`` under an explicit plan (the autotuner's entry point)."""
+    if op in ("segment_sort", "segment_merge") and plan.cap == 0:
+        total = (args[0].shape[0] if op == "segment_sort"
+                 else args[0].shape[0] + args[2].shape[0])
+        plan = plan.replace(cap=segments.static_cap(args[1], total))
+    kw = {"plan": plan, "interpret": _interpret()}
+    if op == "argsort":
+        kw["descending"] = True
+    return registry.get(op, plan.variant)(*args, **kw)
+
+
+# --------------------------------------------------------------------------
+# public ops
+# --------------------------------------------------------------------------
+
+def sort(x, *, descending: bool = True, plan: Optional[Plan] = None,
+         variant: Optional[str] = None):
+    """Full sort of a 1-D array."""
+    plan = _resolve("sort", plan, variant, x)
+    out = registry.get("sort", plan.variant)(x, plan=plan,
+                                             interpret=_interpret())
+    return out if descending else out[::-1]
+
+
+def argsort(keys, *, descending: bool = True, plan: Optional[Plan] = None,
+            variant: Optional[str] = None):
+    """Stable argsort of 1-D keys, or row-wise over a 2-D batch.
+
+    Ties keep their original order (paper algorithm 3 semantics) in both the
+    FLiMS and XLA variants — callers may rely on it for MoE dispatch.
+    """
+    plan = _resolve("argsort", plan, variant, keys)
+    return registry.get("argsort", plan.variant)(
+        keys, plan=plan, descending=descending, interpret=_interpret())
+
+
+def merge(a, b, *, descending: bool = True, plan: Optional[Plan] = None,
+          variant: Optional[str] = None):
+    """Merge two sorted 1-D arrays into one sorted array."""
+    if not descending:
+        return merge(a[::-1], b[::-1], plan=plan, variant=variant)[::-1]
+    plan = _resolve("merge", plan, variant, a, b)
+    return registry.get("merge", plan.variant)(a, b, plan=plan,
+                                               interpret=_interpret())
+
+
+def topk(x, k: int, *, plan: Optional[Plan] = None,
+         variant: Optional[str] = None):
+    """(values, indices) of the k largest along the trailing axis,
+    values descending, ties broken by lower index (lax.top_k order)."""
+    plan = _resolve("topk", plan, variant, x)
+    return registry.get("topk", plan.variant)(x, k, plan=plan,
+                                              interpret=_interpret())
+
+
+def segment_sort(values, offsets, *, descending: bool = True,
+                 cap: int = 0, plan: Optional[Plan] = None,
+                 variant: Optional[str] = None):
+    """Sort every segment of a ragged batch independently.
+
+    ``values`` is the flat (N,) concatenation of S segments with boundaries
+    ``offsets`` ((S+1,), ``offsets[0]==0``, ``offsets[-1]==N``; empty
+    segments allowed). ``cap`` bounds the longest segment (power of two); it
+    is derived from ``offsets`` when concrete, else defaults to
+    ``next_pow2(N)`` — pass it explicitly under ``jit`` to keep blocks tight.
+    """
+    segments.validate_offsets(offsets, values.shape[0])
+    offsets = jnp.asarray(offsets, jnp.int32)
+    plan = _resolve("segment_sort", plan, variant, values, offsets)
+    if cap or not plan.cap:
+        cap = (segments._next_pow2(cap) if cap
+               else segments.static_cap(offsets, values.shape[0]))
+        plan = plan.replace(cap=cap)
+    segments.validate_cap(offsets, plan.cap)
+    out = registry.get("segment_sort", plan.variant)(
+        values, offsets, plan=plan, interpret=_interpret())
+    if not descending:
+        out = segments.reverse_segments(out, offsets, values.shape[0])
+    return out
+
+
+def segment_merge(a, a_offsets, b, b_offsets, *, descending: bool = True,
+                  plan: Optional[Plan] = None,
+                  variant: Optional[str] = None):
+    """Merge S segment pairs of two ragged batches (segment s of the result
+    is the sorted union of a-segment s and b-segment s; its offsets are
+    ``a_offsets + b_offsets``)."""
+    segments.validate_offsets(a_offsets, a.shape[0])
+    segments.validate_offsets(b_offsets, b.shape[0])
+    a_offsets = jnp.asarray(a_offsets, jnp.int32)
+    b_offsets = jnp.asarray(b_offsets, jnp.int32)
+    if not descending:
+        ar = segments.reverse_segments(a, a_offsets, a.shape[0])
+        br = segments.reverse_segments(b, b_offsets, b.shape[0])
+        out = segment_merge(ar, a_offsets, br, b_offsets,
+                            plan=plan, variant=variant)
+        return segments.reverse_segments(
+            out, a_offsets + b_offsets, a.shape[0] + b.shape[0])
+    plan = _resolve("segment_merge", plan, variant, a, a_offsets, b,
+                    b_offsets)
+    return registry.get("segment_merge", plan.variant)(
+        a, a_offsets, b, b_offsets, plan=plan, interpret=_interpret())
+
+
+# --------------------------------------------------------------------------
+# plan management
+# --------------------------------------------------------------------------
+
+def autotune(op: str, *example_args, repeats: int = 3, candidates=None):
+    """Measure every registered variant of ``op`` on the example workload and
+    cache the fastest plan for that shape bucket. Returns the winning Plan."""
+    return default_planner.autotune(op, *example_args, repeats=repeats,
+                                    candidates=candidates)
+
+
+def save_plans(path: str) -> None:
+    default_planner.save(path)
+
+
+def load_plans(path: str) -> None:
+    default_planner.load(path)
+
+
+def clear_plans() -> None:
+    default_planner.clear()

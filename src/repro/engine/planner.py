@@ -1,0 +1,211 @@
+"""Plan selection for the sorting engine: cache → table → heuristic.
+
+A ``Plan`` fixes every degree of freedom of one engine op: the variant
+(ref / banked / Pallas kernel / XLA) and its tile parameters (``w``,
+``block_out``, ``chunk``, segment capacity ``cap``). Resolution order for a
+call (DESIGN.md §3):
+
+1. explicit ``plan=`` / ``variant=`` from the caller,
+2. the in-process plan cache (autotuned or previously resolved),
+3. the persisted plan table (JSON, ``load_plans``/``save_plans``),
+4. the backend heuristic.
+
+Shapes are bucketed to powers of two, so one autotuned entry serves the whole
+neighbourhood of sizes — the plan cache stays tiny and every ``jax.jit``
+retrace reuses the same static parameters.
+
+``autotune(op, *example_args)`` measures every registered variant (times a
+small parameter grid) on the example workload, installs the winner in the
+cache, and returns it. ``save_plans``/``load_plans`` round-trip the table
+through JSON so a fleet can ship pre-tuned tables per backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.core.flims import next_pow2 as _next_pow2
+from repro.engine import registry
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    variant: str
+    w: int = 32
+    block_out: int = 1024
+    chunk: int = 256
+    cap: int = 0           # per-segment capacity; 0 = derive from shape
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Plan":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+    def replace(self, **kw) -> "Plan":
+        return dataclasses.replace(self, **kw)
+
+
+Key = Tuple[str, str, str, int, int]
+
+
+def backend_name() -> str:
+    return jax.default_backend()
+
+
+def plan_key(op: str, *, n: int, dtype, backend: Optional[str] = None,
+             segments: int = 0) -> Key:
+    """Bucketed cache key: op, backend, dtype, pow2(n), pow2(segments)."""
+    return (op, backend or backend_name(), str(jax.numpy.dtype(dtype)),
+            _next_pow2(n), _next_pow2(segments) if segments else 0)
+
+
+def _key_str(key: Key) -> str:
+    op, backend, dtype, n, s = key
+    return f"{op}|{backend}|{dtype}|n{n}|s{s}"
+
+
+def _key_parse(s: str) -> Key:
+    op, backend, dtype, n, seg = s.split("|")
+    return (op, backend, dtype, int(n[1:]), int(seg[1:]))
+
+
+# --------------------------------------------------------------------------
+# heuristics: sensible defaults per backend with no measurements at all
+# --------------------------------------------------------------------------
+
+def heuristic_plan(op: str, key: Key) -> Plan:
+    _, backend, _, n, _ = key
+    w = max(8, min(128, _next_pow2(max(n, 1) // 64)))
+    block_out = max(w, min(4096, _next_pow2(max(n, 1)) // 8 or w))
+    if backend == "tpu":
+        table = {"sort": "pallas", "merge": "pallas", "argsort": "flims",
+                 "topk": "flims", "segment_merge": "pallas",
+                 "segment_sort": "pallas_two_phase"}
+    else:
+        # CPU/GPU interpret-mode kernels are for correctness, not speed:
+        # serve the hot path from XLA, keep merge on the banked dataflow.
+        table = {"sort": "xla", "merge": "banked", "argsort": "xla",
+                 "topk": "xla", "segment_merge": "xla",
+                 "segment_sort": "xla"}
+    return Plan(variant=table[op], w=w, block_out=block_out, chunk=256)
+
+
+# --------------------------------------------------------------------------
+# planner: cache + persistence + autotune
+# --------------------------------------------------------------------------
+
+class Planner:
+    def __init__(self):
+        self._plans: Dict[Key, Plan] = {}
+
+    # -- cache ------------------------------------------------------------
+    def lookup(self, key: Key) -> Optional[Plan]:
+        return self._plans.get(key)
+
+    def put(self, key: Key, plan: Plan) -> None:
+        self._plans[key] = plan
+
+    def clear(self) -> None:
+        self._plans.clear()
+
+    def plan_for(self, op: str, *, n: int, dtype, segments: int = 0,
+                 backend: Optional[str] = None) -> Plan:
+        key = plan_key(op, n=n, dtype=dtype, backend=backend,
+                       segments=segments)
+        hit = self._plans.get(key)
+        if hit is not None:
+            return hit
+        plan = heuristic_plan(op, key)
+        self._plans[key] = plan          # resolve once per bucket
+        return plan
+
+    # -- persistence ------------------------------------------------------
+    def to_table(self) -> dict:
+        return {_key_str(k): p.to_dict() for k, p in self._plans.items()}
+
+    def from_table(self, table: dict) -> None:
+        for ks, pd in table.items():
+            self._plans[_key_parse(ks)] = Plan.from_dict(pd)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"version": 1, "plans": self.to_table()}, f, indent=2,
+                      sort_keys=True)
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            doc = json.load(f)
+        self.from_table(doc.get("plans", {}))
+
+    # -- autotune ---------------------------------------------------------
+    def autotune(self, op: str, *example_args, key: Optional[Key] = None,
+                 run: Optional[Callable] = None, repeats: int = 3,
+                 candidates=None) -> Plan:
+        """Measure candidate plans on an example workload; cache the winner.
+
+        ``run(plan, *example_args)`` executes the op under a plan — the
+        engine api passes its own dispatcher. Candidates default to every
+        registered variant crossed with a small parameter grid.
+        """
+        if run is None:
+            from repro.engine import api
+            run = lambda plan, *a: api.run_op(op, plan, *a)
+        if key is None:
+            from repro.engine import api
+            key = api.infer_key(op, *example_args)
+        if candidates is None:
+            candidates = candidate_plans(op, key)
+        best, best_t = None, float("inf")
+        for plan in candidates:
+            try:
+                t = _time(lambda: run(plan, *example_args), repeats=repeats)
+            except Exception:
+                continue                 # variant can't serve this workload
+            if t < best_t:
+                best, best_t = plan, t
+        if best is None:
+            best = heuristic_plan(op, key)
+        self._plans[key] = best
+        return best
+
+
+def candidate_plans(op: str, key: Key):
+    """Small per-op search grid over the registered variants."""
+    _, _, _, n, _ = key
+    out = []
+    for variant in registry.variants(op):
+        if op in ("merge", "segment_merge"):
+            for w in (32, 128):
+                for block_out in (1024, 4096):
+                    out.append(Plan(variant, w=min(w, max(8, n)),
+                                    block_out=block_out))
+        elif op in ("sort", "segment_sort"):
+            for chunk in (256, 512):
+                out.append(Plan(variant, w=32, chunk=chunk))
+        else:
+            out.append(Plan(variant))
+    return out
+
+
+def _time(thunk: Callable[[], object], repeats: int = 3,
+          warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(thunk())
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(thunk())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+# module-level default planner (the in-process plan cache)
+default_planner = Planner()

@@ -1,0 +1,167 @@
+"""Variant registry: which implementations can serve each engine op.
+
+Every op (``sort``, ``argsort``, ``merge``, ``topk``, ``segment_sort``,
+``segment_merge``) has a family of registered variants — the readable
+reference formulations, the banked/windowed FLiMS dataflow, the Pallas
+kernels, and plain XLA — all behind one calling convention:
+
+    fn(*op_args, plan=Plan, interpret=bool) -> result
+
+The planner picks among ``variants(op)`` by heuristic or autotuned plan
+(DESIGN.md §3); callers can pin one explicitly via ``variant=``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+
+def register(op: str, name: str):
+    def deco(fn):
+        _REGISTRY.setdefault(op, {})[name] = fn
+        return fn
+    return deco
+
+
+def get(op: str, name: str) -> Callable:
+    try:
+        return _REGISTRY[op][name]
+    except KeyError:
+        raise KeyError(
+            f"no variant {name!r} for op {op!r}; known: "
+            f"{sorted(_REGISTRY.get(op, {}))}") from None
+
+
+def variants(op: str):
+    return tuple(sorted(_REGISTRY.get(op, {})))
+
+
+def ops():
+    return tuple(sorted(_REGISTRY))
+
+
+# --------------------------------------------------------------------------
+# merge: two sorted 1-D arrays -> one sorted array (descending)
+# --------------------------------------------------------------------------
+
+@register("merge", "ref")
+def _merge_ref(a, b, *, plan, interpret):
+    from repro.core.flims import flims_merge_ref
+    return flims_merge_ref(a, b, plan.w)
+
+
+@register("merge", "banked")
+def _merge_banked(a, b, *, plan, interpret):
+    from repro.core.flims import flims_merge_banked
+    return flims_merge_banked(a, b, plan.w)
+
+
+@register("merge", "pallas")
+def _merge_pallas(a, b, *, plan, interpret):
+    from repro.kernels.flims_merge import flims_merge_pallas
+    return flims_merge_pallas(a, b, w=plan.w, block_out=plan.block_out,
+                              interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# sort: full descending sort of a 1-D array
+# --------------------------------------------------------------------------
+
+@register("sort", "ref")
+def _sort_ref(x, *, plan, interpret):
+    from repro.core.mergesort import flims_sort
+    return flims_sort(x, chunk=plan.chunk, w=plan.w)
+
+
+@register("sort", "pallas")
+def _sort_pallas(x, *, plan, interpret):
+    from repro.kernels.ops import kernel_sort
+    return kernel_sort(x, chunk=plan.chunk, w=plan.w)
+
+
+@register("sort", "xla")
+def _sort_xla(x, *, plan, interpret):
+    return jnp.sort(x, descending=True)
+
+
+# --------------------------------------------------------------------------
+# argsort: stable permutation ordering keys (1-D, or 2-D row-wise)
+# --------------------------------------------------------------------------
+
+@register("argsort", "flims")
+def _argsort_flims(keys, *, plan, descending, interpret):
+    from repro.core.mergesort import flims_argsort
+    fn = lambda k: flims_argsort(k, chunk=plan.chunk, w=plan.w,
+                                 descending=descending)
+    if keys.ndim == 2:
+        return jax.vmap(fn)(keys)
+    return fn(keys)
+
+
+@register("argsort", "xla")
+def _argsort_xla(keys, *, plan, descending, interpret):
+    return jnp.argsort(keys, axis=-1, stable=True,
+                       descending=descending).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# topk: (values, indices) of the k largest along the trailing axis
+# --------------------------------------------------------------------------
+
+@register("topk", "flims")
+def _topk_flims(x, k, *, plan, interpret):
+    from repro.core.topk import flims_topk
+    return flims_topk(x, k)
+
+
+@register("topk", "xla")
+def _topk_xla(x, k, *, plan, interpret):
+    return lax.top_k(x, k)
+
+
+# --------------------------------------------------------------------------
+# segment_merge: ragged batch of 2-way merges
+# --------------------------------------------------------------------------
+
+@register("segment_merge", "pallas")
+def _segment_merge_pallas(a, ao, b, bo, *, plan, interpret):
+    from repro.kernels.segmented_merge import segmented_merge_pallas
+    return segmented_merge_pallas(a, ao, b, bo, w=plan.w,
+                                  block_out=plan.block_out,
+                                  interpret=interpret)
+
+
+@register("segment_merge", "xla")
+def _segment_merge_xla(a, ao, b, bo, *, plan, interpret):
+    from repro.engine.segments import segment_merge_ref
+    return segment_merge_ref(a, ao, b, bo)
+
+
+# --------------------------------------------------------------------------
+# segment_sort: ragged batch of full sorts
+# --------------------------------------------------------------------------
+
+@register("segment_sort", "pallas_fused")
+def _segment_sort_fused(values, offsets, *, plan, interpret):
+    from repro.kernels.segmented_merge import segment_sort_pallas
+    return segment_sort_pallas(values, offsets, cap=plan.cap,
+                               interpret=interpret)
+
+
+@register("segment_sort", "pallas_two_phase")
+def _segment_sort_two_phase(values, offsets, *, plan, interpret):
+    from repro.kernels.segmented_merge import segment_sort_two_phase
+    return segment_sort_two_phase(values, offsets, cap=plan.cap,
+                                  chunk=min(plan.chunk, plan.cap), w=plan.w,
+                                  interpret=interpret)
+
+
+@register("segment_sort", "xla")
+def _segment_sort_xla(values, offsets, *, plan, interpret):
+    from repro.engine.segments import segment_sort_ref
+    return segment_sort_ref(values, offsets, cap=plan.cap)

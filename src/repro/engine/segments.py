@@ -1,0 +1,136 @@
+"""Ragged-batch (segmented) helpers and pure-jnp reference variants.
+
+A ragged batch is a flat 1-D value array plus an ``(S+1,)`` offsets vector:
+segment ``s`` is ``values[offsets[s]:offsets[s+1]]``. Offsets must be
+non-decreasing with ``offsets[0] == 0`` and ``offsets[-1] == len(values)``;
+empty segments are legal. This is the MoE-dispatch / ragged-sampler shape the
+engine's ``segment_sort`` / ``segment_merge`` operate on.
+
+The ``*_ref`` functions here are the capacity-padded XLA formulations: exact
+same semantics as the Pallas kernels, used as the planner's fallback variant
+and as a second oracle in tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flims import sentinel_for, next_pow2 as _next_pow2
+
+
+def lengths_from_offsets(offsets):
+    return jnp.diff(offsets)
+
+
+def offsets_from_lengths(lengths):
+    lengths = jnp.asarray(lengths, jnp.int32)
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(lengths)]).astype(jnp.int32)
+
+
+def is_concrete(x) -> bool:
+    """True when ``x`` carries host-visible values (not a tracer)."""
+    return not isinstance(x, jax.core.Tracer)
+
+
+def validate_offsets(offsets, total: int) -> None:
+    """Host-side sanity check; only possible on concrete offsets."""
+    if not is_concrete(offsets):
+        return
+    o = np.asarray(offsets)
+    if o.ndim != 1 or o.shape[0] < 1:
+        raise ValueError(f"offsets must be 1-D (S+1,), got shape {o.shape}")
+    if o[0] != 0 or o[-1] != total:
+        raise ValueError(f"offsets must span [0, {total}], got "
+                         f"[{o[0]}, {o[-1]}]")
+    if (np.diff(o) < 0).any():
+        raise ValueError("offsets must be non-decreasing")
+
+
+def static_cap(offsets, total: int) -> int:
+    """Power-of-two per-segment capacity: tight when offsets are concrete,
+    the safe ``next_pow2(total)`` bound when traced."""
+    if is_concrete(offsets) and np.asarray(offsets).shape[0] > 1:
+        return _next_pow2(int(np.max(np.diff(np.asarray(offsets)))))
+    return _next_pow2(total)
+
+
+def validate_cap(offsets, cap: int) -> None:
+    """A cap smaller than the longest segment would silently truncate it;
+    reject when offsets are concrete enough to check."""
+    if not is_concrete(offsets):
+        return
+    o = np.asarray(offsets)
+    if o.shape[0] > 1 and int(np.max(np.diff(o))) > cap:
+        raise ValueError(
+            f"cap={cap} is smaller than the longest segment "
+            f"({int(np.max(np.diff(o)))}); it would be truncated")
+
+
+def segment_ids(offsets, total: int):
+    """(total,) int32 segment id of every flat position."""
+    i = jnp.arange(total, dtype=jnp.int32)
+    S = offsets.shape[0] - 1
+    return jnp.clip(jnp.searchsorted(offsets.astype(jnp.int32), i,
+                                     side="right") - 1, 0, max(S - 1, 0))
+
+
+def pad_segments(values, offsets, cap: int):
+    """Gather the ragged batch into a dense sentinel-padded (S, cap) bank."""
+    from repro.kernels.segmented_merge import padded_bank
+    return padded_bank(values, offsets, cap)
+
+
+def unpad_segments(bank, offsets, total: int):
+    """Inverse of ``pad_segments``: gather the valid prefixes back flat."""
+    offsets = offsets.astype(jnp.int32)
+    s = segment_ids(offsets, total)
+    i = jnp.arange(total, dtype=jnp.int32)
+    return bank[s, i - offsets[s]]
+
+
+def reverse_segments(values, offsets, total: int):
+    """Reverse each segment in place (descending ↔ ascending)."""
+    offsets = offsets.astype(jnp.int32)
+    s = segment_ids(offsets, total)
+    i = jnp.arange(total, dtype=jnp.int32)
+    lens = jnp.diff(offsets)
+    return values[offsets[s] + lens[s] - 1 - (i - offsets[s])]
+
+
+def segment_sort_ref(values, offsets, *, cap: int = 0):
+    """Capacity-padded XLA segmented sort (descending)."""
+    N = values.shape[0]
+    S = offsets.shape[0] - 1
+    if S <= 0 or N == 0:
+        return jnp.zeros((N,), values.dtype)
+    cap = cap or _next_pow2(N)
+    bank = pad_segments(values, offsets, cap)
+    bank = jnp.sort(bank, axis=-1, descending=True)
+    return unpad_segments(bank, offsets, N)
+
+
+def segment_merge_ref(a, a_offsets, b, b_offsets):
+    """Capacity-padded XLA segmented merge (descending): per segment, the
+    multiset union of the two runs, sorted. Sentinels pad and sort last."""
+    n_out = a.shape[0] + b.shape[0]
+    S = a_offsets.shape[0] - 1
+    if S <= 0 or n_out == 0:
+        return jnp.zeros((n_out,), a.dtype)
+    cap = _next_pow2(n_out)
+    bank = jnp.concatenate([pad_segments(a, a_offsets, cap),
+                            pad_segments(b, b_offsets, cap)], axis=-1)
+    bank = jnp.sort(bank, axis=-1, descending=True)
+    out_offsets = (a_offsets + b_offsets).astype(jnp.int32)
+    return unpad_segments(bank, out_offsets, n_out)
+
+
+def segment_sort_oracle(values, offsets):
+    """NumPy per-segment oracle (host-side, test/debug only)."""
+    v = np.asarray(values)
+    o = np.asarray(offsets)
+    return np.concatenate(
+        [np.sort(v[o[s]:o[s + 1]])[::-1] for s in range(o.shape[0] - 1)]
+        or [np.zeros((0,), v.dtype)])

@@ -1,3 +1,5 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   bitonic_sort.py     sort-in-chunks (paper §8.2 phase 1)
+#   flims_merge.py      merge-path partitioned FLiMS 2-way merge (DESIGN.md §2)
+#   segmented_merge.py  batched ragged merge/sort, one pallas_call (DESIGN.md §3)
+#   ops.py              jit'd public wrappers; ref.py: pure-jnp oracles

@@ -28,6 +28,19 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.flims import sentinel_for
 
 
+def element_block_spec(n_rows: int, w: int, index_map) -> pl.BlockSpec:
+    """(n_rows, w) input block addressed at *element* granularity in dim 0.
+
+    JAX >= 0.5 spells this ``pl.Element``; 0.4.x spells it
+    ``indexing_mode=pl.Unblocked()``. Either way ``index_map`` must return the
+    starting row in elements (the lane dim is always full-width at 0).
+    """
+    if hasattr(pl, "Element"):
+        return pl.BlockSpec((pl.Element(n_rows), w), index_map)
+    return pl.BlockSpec((n_rows, w), index_map,
+                        indexing_mode=pl.Unblocked())
+
+
 def _butterfly_desc(v: jnp.ndarray) -> jnp.ndarray:
     """Sort a (rotated-)bitonic w-vector descending: log2(w) CAS stages."""
     w = v.shape[-1]
@@ -150,10 +163,10 @@ def flims_merge_pallas(a: jnp.ndarray, b: jnp.ndarray, *, w: int = 128,
         num_scalar_prefetch=4,
         grid=(G,),
         in_specs=[
-            pl.BlockSpec((pl.Element(Ha), w),
-                         lambda g, ar0, br0, la, lb: (ar0[g], 0)),
-            pl.BlockSpec((pl.Element(Ha), w),
-                         lambda g, ar0, br0, la, lb: (br0[g], 0)),
+            element_block_spec(Ha, w,
+                               lambda g, ar0, br0, la, lb: (ar0[g], 0)),
+            element_block_spec(Ha, w,
+                               lambda g, ar0, br0, la, lb: (br0[g], 0)),
         ],
         out_specs=pl.BlockSpec((1, C), lambda g, *_: (g, 0)),
     )

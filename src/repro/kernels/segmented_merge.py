@@ -1,0 +1,320 @@
+"""Pallas TPU kernel: segmented (batched ragged) FLiMS merge and sort.
+
+Extends the merge-path partitioning of ``kernels/flims_merge.py`` (DESIGN.md
+§2) from one merge to a whole *ragged batch* of merges in a single
+``pallas_call``: the grid is flattened over (segment, output-block) pairs and
+four scalar-prefetched vectors carry, per grid step, the co-rank row/rotation
+of each input run. Because every output block is ``C`` elements with ``C`` a
+multiple of ``w``, the FLiMS rotation invariant ``(lA + lB) ≡ 0 (mod w)``
+holds at every (segment, block) boundary, so each grid step starts the banked
+dataflow mid-rotation with zero realignment — the same property the
+single-merge kernel exploits, now across an arbitrary ragged batch.
+
+Layout: each run is repacked (host-side gather) into its own row-aligned
+sentinel-padded bank of width ``w``; run ``s`` owns rows
+``[row0[s], row0[s+1])``. Per-segment co-ranks are found by the same
+vectorised merge-path binary search, but bounded by *dynamic* run lengths.
+Empty segments and one-sided runs need no special casing: their banks are all
+sentinel rows and the selector drains the other side.
+
+This is the compute core of ``repro.engine.segment_merge`` /
+``segment_sort`` (DESIGN.md §3), i.e. the MoE-dispatch / ragged-batch shape.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.flims import sentinel_for, next_pow2 as _next_pow2
+from repro.kernels.bitonic_sort import _bitonic_rows_desc
+from repro.kernels.flims_merge import _merge_kernel, element_block_spec
+
+
+def padded_bank(values, offsets, cap: int):
+    """Gather a ragged batch into a dense sentinel-padded (S, cap) bank.
+
+    Shared by both segment-sort strategies and re-exported as
+    ``engine.pad_segments``. ``cap`` must cover the longest segment;
+    shorter tails are sentinel-filled so they sort last.
+    """
+    S = offsets.shape[0] - 1
+    N = values.shape[0]
+    sent = sentinel_for(values.dtype)
+    if N == 0:
+        return jnp.full((S, cap), sent, values.dtype)
+    offsets = offsets.astype(jnp.int32)
+    lens = jnp.diff(offsets)
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    src = jnp.clip(offsets[:-1, None] + idx[None, :], 0, N - 1)
+    return jnp.where(idx[None, :] < lens[:, None], values[src], sent)
+
+
+def _plus_inf_for(dtype):
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def _build_bank(buf, starts, lens, row0, cap_rows: int, w: int):
+    """Gather flat runs into a (cap_rows, w) row-aligned sentinel-padded bank.
+
+    Run ``s`` (``buf[starts[s] : starts[s]+lens[s]]``) fills rows
+    ``[row0[s], row0[s+1])`` row-major; everything else is sentinel.
+    """
+    sent = sentinel_for(buf.dtype)
+    if buf.shape[0] == 0:
+        return jnp.full((cap_rows, w), sent, buf.dtype)
+    rows = jnp.arange(cap_rows, dtype=jnp.int32)
+    n_runs = starts.shape[0]
+    s = jnp.clip(jnp.searchsorted(row0, rows, side="right") - 1, 0, n_runs - 1)
+    base = (rows - row0[s]) * w                       # in-run offset of row
+    idx = base[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    valid = (idx >= 0) & (idx < lens[s][:, None])
+    src = jnp.clip(starts[s][:, None] + idx, 0, buf.shape[0] - 1)
+    return jnp.where(valid, buf[src], sent)
+
+
+def _corank_runs(o, la, lb, astart, bstart, a, b, steps: int):
+    """Merge-path co-rank inside one (A-run, B-run) pair: #A-elements among
+    the top-``o`` of the descending union, ties preferring B. ``la``/``lb``
+    are *dynamic* run lengths; reads index the flat buffers with clipping."""
+    bigA = _plus_inf_for(a.dtype)
+    bigB = _plus_inf_for(b.dtype)
+    sentA = sentinel_for(a.dtype)
+    sentB = sentinel_for(b.dtype)
+    nA = max(a.shape[0], 1)
+    nB = max(b.shape[0], 1)
+    ap = a if a.shape[0] else jnp.full((1,), sentA, a.dtype)
+    bp = b if b.shape[0] else jnp.full((1,), sentB, b.dtype)
+
+    def getA(i):
+        v = ap[jnp.clip(astart + i, 0, nA - 1)]
+        v = jnp.where(i < 0, bigA, v)
+        return jnp.where(i >= la, sentA, v)
+
+    def getB(i):
+        v = bp[jnp.clip(bstart + i, 0, nB - 1)]
+        v = jnp.where(i < 0, bigB, v)
+        return jnp.where(i >= lb, sentB, v)
+
+    lo = jnp.maximum(0, o - lb)
+    hi = jnp.minimum(o, la)
+
+    def step(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi + 1) // 2
+        ok = getA(mid - 1) > getB(o - mid)
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid - 1)
+
+    lo, hi = lax.fori_loop(0, steps, step, (lo, hi))
+    return lo
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_out", "w", "block_out", "interpret"))
+def segmented_merge_runs(a, b, a_starts, a_lens, b_starts, b_lens, *,
+                         n_out: int, w: int = 32, block_out: int = 1024,
+                         interpret: bool = True):
+    """Merge R run pairs — ``a[a_starts[s]:+a_lens[s]]`` with
+    ``b[b_starts[s]:+b_lens[s]]``, each descending — in ONE ``pallas_call``.
+
+    Returns the (n_out,) concatenation of the merged runs in run order;
+    ``n_out`` must equal ``sum(a_lens) + sum(b_lens)`` (static contract —
+    callers derive it from shapes or static paddings).
+    """
+    R = a_starts.shape[0]
+    assert a.dtype == b.dtype and w & (w - 1) == 0
+    if R == 0 or n_out == 0:
+        return jnp.zeros((n_out,), a.dtype)
+    C = max(w, min(block_out, _next_pow2(n_out)))
+    C = (C // w) * w
+    cycles = C // w
+    Ha = cycles + 2
+    G = n_out // C + R                    # >= sum ceil(out_len_s / C)
+
+    a_starts = a_starts.astype(jnp.int32)
+    b_starts = b_starts.astype(jnp.int32)
+    la = a_lens.astype(jnp.int32)
+    lb = b_lens.astype(jnp.int32)
+    lo_len = la + lb
+
+    # --- flat grid over (segment, block) pairs -----------------------------
+    nb = -(-lo_len // C)                              # blocks per segment
+    blk0 = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(nb)])
+    g = jnp.arange(G, dtype=jnp.int32)
+    seg = jnp.clip(jnp.searchsorted(blk0, g, side="right") - 1, 0, R - 1)
+    # tail steps past the last real block recompute segment-final co-ranks;
+    # their outputs are never gathered.
+    o = jnp.minimum((g - blk0[seg]) * C, (lo_len[seg] // C) * C)
+
+    # --- per-run row-aligned banks -----------------------------------------
+    ra = -(-la // w) + Ha + 2
+    rb = -(-lb // w) + Ha + 2
+    ra0 = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(ra)])
+    rb0 = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(rb)])
+    RA = n_out // w + R * (Ha + 3)                    # static row capacity
+    RB = RA
+    abank = _build_bank(a, a_starts, la, ra0, RA, w)
+    bbank = _build_bank(b, b_starts, lb, rb0, RB, w)
+
+    # --- per-(segment, block) co-ranks (vectorised binary search) ----------
+    steps = max(1, math.ceil(math.log2(max(n_out, 2))) + 1)
+    acut = jax.vmap(lambda oo, s: _corank_runs(
+        oo, la[s], lb[s], a_starts[s], b_starts[s], a, b, steps))(o, seg)
+    acut = acut.astype(jnp.int32)
+    bcut = o - acut
+    arow0 = jnp.minimum(ra0[seg] + acut // w, RA - Ha)
+    brow0 = jnp.minimum(rb0[seg] + bcut // w, RB - Ha)
+    la0 = acut % w
+    lb0 = bcut % w
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(G,),
+        in_specs=[
+            element_block_spec(Ha, w,
+                               lambda g, ar0, br0, la, lb: (ar0[g], 0)),
+            element_block_spec(Ha, w,
+                               lambda g, ar0, br0, la, lb: (br0[g], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C), lambda g, *_: (g, 0)),
+    )
+    kern = functools.partial(_merge_kernel, w=w, cycles=cycles)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((G, C), a.dtype),
+        interpret=interpret,
+        name="flims_segmented_merge",
+    )(arow0, brow0, la0, lb0, abank, bbank)
+
+    # --- gather padded blocks back to the flat ragged layout ---------------
+    oo = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(lo_len)])
+    i = jnp.arange(n_out, dtype=jnp.int32)
+    s = jnp.clip(jnp.searchsorted(oo, i, side="right") - 1, 0, R - 1)
+    pos = i - oo[s]
+    gg = jnp.clip(blk0[s] + pos // C, 0, G - 1)
+    return out[gg, pos % C]
+
+
+@functools.partial(jax.jit, static_argnames=("w", "block_out", "interpret"))
+def segmented_merge_pallas(a, a_offsets, b, b_offsets, *, w: int = 32,
+                           block_out: int = 1024, interpret: bool = True):
+    """Merge S segment pairs described by offset vectors, one ``pallas_call``.
+
+    ``a``/``b`` are flat concatenations of S descending runs with boundaries
+    ``a_offsets``/``b_offsets`` (each ``(S+1,)``, ``offsets[0] == 0``,
+    ``offsets[-1] == len``). Segment s of the result is the descending merge
+    of a-run s and b-run s; the output offsets are
+    ``a_offsets + b_offsets``. Empty segments are fine.
+    """
+    assert a.ndim == b.ndim == 1 and a.dtype == b.dtype
+    assert a_offsets.shape == b_offsets.shape and a_offsets.ndim == 1
+    S = a_offsets.shape[0] - 1
+    n_out = a.shape[0] + b.shape[0]
+    if S <= 0 or n_out == 0:
+        return jnp.zeros((n_out,), a.dtype)
+    a_offsets = a_offsets.astype(jnp.int32)
+    b_offsets = b_offsets.astype(jnp.int32)
+    return segmented_merge_runs(
+        a, b, a_offsets[:-1], jnp.diff(a_offsets),
+        b_offsets[:-1], jnp.diff(b_offsets),
+        n_out=n_out, w=w, block_out=block_out, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# segmented sort
+# --------------------------------------------------------------------------
+
+def _sort_row_kernel(x_ref, o_ref):
+    o_ref[...] = _bitonic_rows_desc(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "interpret"))
+def segment_sort_pallas(values, offsets, *, cap: int = 0,
+                        interpret: bool = True):
+    """Sort every segment of a ragged batch descending in ONE ``pallas_call``.
+
+    The fused strategy: each grid step owns one segment, padded to the static
+    capacity ``cap`` (a power of two ≥ the longest segment; defaults to
+    ``next_pow2(len(values))``), and runs the full bitonic network over it.
+    Good up to moderate ``cap``; the engine's two-phase strategy
+    (chunk sort + segmented FLiMS merge passes) covers the long-segment end.
+    """
+    assert values.ndim == 1 and offsets.ndim == 1
+    S = offsets.shape[0] - 1
+    N = values.shape[0]
+    if S <= 0 or N == 0:
+        return jnp.zeros((N,), values.dtype)
+    cap = cap or _next_pow2(max(N, 1))
+    assert cap & (cap - 1) == 0 and cap >= 1
+    offsets = offsets.astype(jnp.int32)
+    bank = padded_bank(values, offsets, cap)
+
+    out = pl.pallas_call(
+        _sort_row_kernel,
+        grid=(S,),
+        in_specs=[pl.BlockSpec((1, cap), lambda s: (s, 0))],
+        out_specs=pl.BlockSpec((1, cap), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, cap), values.dtype),
+        interpret=interpret,
+        name="flims_segment_sort",
+    )(bank)
+
+    i = jnp.arange(N, dtype=jnp.int32)
+    s = jnp.clip(jnp.searchsorted(offsets, i, side="right") - 1, 0, S - 1)
+    return out[s, i - offsets[s]]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "chunk", "w", "interpret"))
+def segment_sort_two_phase(values, offsets, *, cap: int, chunk: int = 256,
+                           w: int = 32, interpret: bool = True):
+    """Two-phase segmented sort: one chunk-sort ``pallas_call`` over ALL
+    segments' rows, then log2(cap/chunk) segmented FLiMS merge passes, each
+    one ``pallas_call`` across the whole batch (TopSort-style phase plan).
+
+    Every segment is padded to the static ``cap`` (power of two ≥ longest
+    segment); sentinels ride through the merges and sort last, so the valid
+    prefix of each segment is its true descending sort.
+    """
+    from repro.kernels.bitonic_sort import sort_chunks_pallas
+    assert values.ndim == 1 and offsets.ndim == 1
+    S = offsets.shape[0] - 1
+    N = values.shape[0]
+    if S <= 0 or N == 0:
+        return jnp.zeros((N,), values.dtype)
+    assert cap & (cap - 1) == 0 and chunk & (chunk - 1) == 0
+    chunk = min(chunk, cap)
+    offsets = offsets.astype(jnp.int32)
+    bank = padded_bank(values, offsets, cap)
+
+    # phase 1: sort width-``chunk`` rows of every segment at once
+    rows = sort_chunks_pallas(bank.reshape(S * (cap // chunk), chunk),
+                              interpret=interpret)
+    flat = rows.reshape(S * cap)
+
+    # phase 2: pairwise segmented merge passes over uniform L-runs
+    L = chunk
+    while L < cap:
+        m = cap // (2 * L)                      # run pairs per segment
+        j = jnp.arange(S * m, dtype=jnp.int32)
+        a_starts = (j // m) * cap + (j % m) * 2 * L
+        b_starts = a_starts + L
+        lens_l = jnp.full((S * m,), L, jnp.int32)
+        flat = segmented_merge_runs(
+            flat, flat, a_starts, lens_l, b_starts, lens_l,
+            n_out=S * cap, w=min(w, L), block_out=max(2 * L, w),
+            interpret=interpret)
+        L *= 2
+
+    i = jnp.arange(N, dtype=jnp.int32)
+    s = jnp.clip(jnp.searchsorted(offsets, i, side="right") - 1, 0, S - 1)
+    return flat.reshape(S, cap)[s, i - offsets[s]]

@@ -1,4 +1,8 @@
-"""Batched serving driver: prefill + decode loop with FLiMS top-k sampling.
+"""Batched serving driver: prefill + decode loop with engine top-k sampling.
+
+The sampler routes through ``repro.engine`` — the planner picks the FLiMS
+merge-tree top-k or ``lax.top_k`` per backend, ``--flims-topk``/``--lax-topk``
+pin a variant, and ``--plans plans.json`` preloads an autotuned plan table.
 
 Run small on CPU:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
@@ -19,7 +23,7 @@ from repro.models.model import build_model, sample_topk
 
 
 def serve(cfg, batch: int, prompt_len: int, gen: int, max_seq: int = 0,
-          use_flims_topk: bool = True, seed: int = 0):
+          use_flims_topk: bool = None, seed: int = 0):
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
     params = model.init(key)
@@ -76,13 +80,26 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--lax-topk", action="store_true")
+    ap.add_argument("--lax-topk", action="store_true",
+                    help="pin the sampler to lax.top_k")
+    ap.add_argument("--flims-topk", action="store_true",
+                    help="pin the sampler to the FLiMS merge-tree top-k")
+    ap.add_argument("--plans", default=None,
+                    help="JSON plan table to preload into the engine")
     args = ap.parse_args(argv)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.plans:
+        from repro import engine
+        engine.load_plans(args.plans)
+    use_flims = None                     # planner decides per backend
+    if args.lax_topk:
+        use_flims = False
+    elif args.flims_topk:
+        use_flims = True
     toks, dt = serve(cfg, args.batch, args.prompt_len, args.gen,
-                     use_flims_topk=not args.lax_topk)
+                     use_flims_topk=use_flims)
     print(f"[serve] generated {toks.shape} tokens in {dt:.2f}s "
           f"({toks.shape[0] * toks.shape[1] / dt:.1f} tok/s)")
     print(toks[:2, :16])

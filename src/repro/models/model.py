@@ -169,15 +169,18 @@ def _build_encdec(cfg: ModelConfig) -> SimpleNamespace:
 # --------------------------------------------------------------------------
 
 def sample_topk(key, logits, k: int = 64, temperature: float = 1.0,
-                use_flims: bool = True):
-    """logits: (B, V) → sampled token ids (B,)."""
-    from repro.core.topk import flims_topk
+                use_flims: bool = None):
+    """logits: (B, V) → sampled token ids (B,).
+
+    Top-k selection goes through ``repro.engine`` — the planner picks the
+    FLiMS merge-tree or ``lax.top_k`` per backend; ``use_flims`` pins the
+    variant (True → 'flims', False → 'xla', None → planner's choice).
+    """
+    from repro import engine
     if temperature <= 0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    if use_flims:
-        vals, idx = flims_topk(logits, k)
-    else:
-        vals, idx = lax.top_k(logits, k)
+    variant = None if use_flims is None else ("flims" if use_flims else "xla")
+    vals, idx = engine.topk(logits, k, variant=variant)
     gumbel = -jnp.log(-jnp.log(
         jax.random.uniform(key, vals.shape, minval=1e-9, maxval=1.0)))
     choice = jnp.argmax(vals / temperature + gumbel, axis=-1)

@@ -4,9 +4,11 @@ Two dispatch paths:
 - ``dense``: one-hot combine einsum over the expert axis — fully static,
   GSPMD-friendly; experts shard over the model axis (EP) or their hidden dim
   shards (TP) per ShardingConfig. This is the path the 512-chip dry-run uses.
-- ``sorted``: dropless dispatch that orders tokens by expert with the FLiMS
-  stable argsort (core.mergesort) — the paper's sorter as a first-class
-  framework feature. Used on small/local shapes (examples/moe_routing.py).
+- ``sorted``: dropless dispatch that orders tokens by expert with a stable
+  argsort served by ``repro.engine`` (planner-selected variant: FLiMS on TPU,
+  XLA on CPU) — the paper's sorter as a first-class framework feature. The
+  grouped path sorts all device groups in ONE batched engine call instead of
+  vmapping a per-group sorter.
 """
 from __future__ import annotations
 
@@ -15,8 +17,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import engine
 from repro.models.layers import dense_init
-from repro.core.mergesort import flims_argsort
 from repro.parallel.act import constrain, constrain_expert_hidden
 
 
@@ -98,9 +100,9 @@ def moe_apply_sorted(p, x, cfg, capacity_factor: float = 1.25):
     flat_e = idx.reshape(T * k)                        # expert of each pair
     flat_w = w.reshape(T * k)
     tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
-    # FLiMS stable argsort on expert id (ascending): groups pairs by expert,
+    # stable argsort on expert id (ascending): groups pairs by expert,
     # original order preserved inside each group (stability = paper alg. 3).
-    order = flims_argsort(flat_e.astype(jnp.int32), descending=False)
+    order = engine.argsort(flat_e.astype(jnp.int32), descending=False)
     e_sorted = flat_e[order]
     t_sorted = tok[order]
     w_sorted = flat_w[order]
@@ -120,28 +122,35 @@ def moe_apply_sorted(p, x, cfg, capacity_factor: float = 1.25):
     return y.reshape(B, S, d)
 
 
-def _one_group_dispatch(p, xf, cfg, cap):
-    """Sorted dispatch for one device group. xf: (T, d) local tokens."""
-    T, d = xf.shape
+def _group_dispatch_batched(p, xg, cfg, cap):
+    """Sorted dispatch for all G device groups at once. xg: (G, T, d).
+
+    The (token, expert) pairs of every group are ordered by expert in ONE
+    batched stable argsort through ``repro.engine`` (stability keeps token
+    order inside each expert slab, paper alg. 3); only the scatter into
+    capacity slabs stays vmapped.
+    """
+    G, T, d = xg.shape
     k, E = cfg.n_experts_active, cfg.n_experts
-    w, idx = router_probs(p, xf[None], cfg)
-    w, idx = w[0], idx[0]                              # (T, k)
-    flat_e = idx.reshape(T * k).astype(jnp.int32)
-    flat_w = w.reshape(T * k)
+    w, idx = router_probs(p, xg, cfg)                  # (G, T, k)
+    flat_e = idx.reshape(G, T * k).astype(jnp.int32)
+    flat_w = w.reshape(G, T * k)
     tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
-    # FLiMS stable argsort groups pairs by expert (paper alg. 3 stability
-    # keeps token order inside each expert slab)
-    order = flims_argsort(flat_e, descending=False)
-    e_sorted = flat_e[order]
-    t_sorted = tok[order]
-    w_sorted = flat_w[order]
-    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - jnp.searchsorted(
-        e_sorted, e_sorted, side="left").astype(jnp.int32)
-    keep = pos_in_e < cap
-    slab_idx = jnp.where(keep, e_sorted * cap + pos_in_e, E * cap)
-    xin = jnp.zeros((E * cap + 1, d), xf.dtype).at[slab_idx].set(
-        xf[t_sorted])
-    xin = xin[:-1].reshape(E, cap, d)
+    order = engine.argsort(flat_e, descending=False)   # one batched sort
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=1)
+    w_sorted = jnp.take_along_axis(flat_w, order, axis=1)
+    t_sorted = tok[order]                              # (G, T*k)
+
+    def pack(e_sorted, t_sorted, xf):
+        pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - jnp.searchsorted(
+            e_sorted, e_sorted, side="left").astype(jnp.int32)
+        keep = pos_in_e < cap
+        slab_idx = jnp.where(keep, e_sorted * cap + pos_in_e, E * cap)
+        xin = jnp.zeros((E * cap + 1, d), xf.dtype).at[slab_idx].set(
+            xf[t_sorted])
+        return xin[:-1].reshape(E, cap, d), slab_idx, keep
+
+    xin, slab_idx, keep = jax.vmap(pack)(e_sorted, t_sorted, xg)
     return xin, slab_idx, t_sorted, w_sorted, keep
 
 
@@ -171,8 +180,8 @@ def moe_apply_grouped(p, x, cfg, capacity_factor: float = 1.25,
 
     def one_chunk(_, xc):                               # xc: (B, Sc, d)
         xg = constrain(xc.reshape(G, T, d), "dp", None, None)
-        xin, slab_idx, t_sorted, w_sorted, keep = jax.vmap(
-            lambda xf: _one_group_dispatch(p, xf, cfg, cap))(xg)
+        xin, slab_idx, t_sorted, w_sorted, keep = _group_dispatch_batched(
+            p, xg, cfg, cap)
         xin = constrain(xin, "dp", None, None, None)    # (G, E, cap, d)
         h = jnp.einsum("gecd,edf->gecf", xin, p["wg"])
         h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xin, p["wi"])
@@ -250,7 +259,7 @@ def moe_apply_ep(p, x, cfg, capacity_factor: float = 1.25,
             flat_e = idx.reshape(T * k).astype(jnp.int32)
             flat_w = wgt.reshape(T * k)
             tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
-            order = flims_argsort(flat_e, descending=False)
+            order = engine.argsort(flat_e, descending=False)
             e_sorted = flat_e[order]
             t_sorted = tok[order]
             w_sorted = flat_w[order]

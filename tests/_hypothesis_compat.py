@@ -1,0 +1,94 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The property tests degrade to a fixed example sweep: for each test, one
+minimal ("edge") example plus a seeded batch of random ones, so the suite
+still exercises the properties (empty inputs, duplicates, size boundaries)
+without the real shrinking search. Install ``requirements-dev.txt`` to get
+full hypothesis behaviour where available.
+
+Only the API surface the test-suite uses is provided: ``given``,
+``settings.register_profile`` / ``load_profile``, and the ``st`` strategies
+``integers``, ``booleans``, ``sampled_from``, ``lists``, ``floats``.
+"""
+from __future__ import annotations
+
+import hashlib
+import inspect
+
+import numpy as np
+
+N_EXAMPLES = 12
+
+
+class _Strategy:
+    def __init__(self, draw, edge):
+        self.draw = draw          # rng -> random example
+        self.edge = edge          # () -> minimal example
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            lambda: int(min_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)), lambda: False)
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))],
+                         lambda: seq[0])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(
+            draw, lambda: [elements.edge() for _ in range(min_size)])
+
+    @staticmethod
+    def floats(min_value=None, max_value=None, **_ignored):
+        lo = -1e6 if min_value is None else min_value
+        hi = 1e6 if max_value is None else max_value
+
+        def draw(rng):
+            return float(np.float32(rng.uniform(lo, hi)))
+        return _Strategy(draw, lambda: float(lo))
+
+
+st = strategies
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper():
+            seed = int(hashlib.md5(fn.__name__.encode()).hexdigest()[:8], 16)
+            rng = np.random.default_rng(seed)
+            fn(*[s.edge() for s in strats])
+            for _ in range(N_EXAMPLES):
+                fn(*[s.draw(rng) for s in strats])
+        # plain zero-arg signature: pytest must not see fn's params as
+        # fixtures (the drawn arguments are supplied here, not by pytest)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+class settings:
+    def __init__(self, *a, **k):
+        pass
+
+    @staticmethod
+    def register_profile(*a, **k):
+        pass
+
+    @staticmethod
+    def load_profile(*a, **k):
+        pass

@@ -1,0 +1,292 @@
+"""repro.engine: segmented ops vs per-segment oracles, planner, autotune."""
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import engine
+from repro.engine.planner import Plan, Planner, heuristic_plan, plan_key
+from repro.kernels.segmented_merge import (segment_sort_pallas,
+                                           segmented_merge_pallas)
+
+RNG = np.random.default_rng(11)
+
+
+def _ragged(lens, dtype=np.int32, sort_desc=False, lo=-50, hi=50):
+    if np.issubdtype(dtype, np.integer):
+        segs = [RNG.integers(lo, hi, n).astype(dtype) for n in lens]
+    else:
+        segs = [RNG.standard_normal(n).astype(dtype) for n in lens]
+    if sort_desc:
+        segs = [np.sort(s)[::-1] for s in segs]
+    flat = (np.concatenate(segs) if sum(lens) else np.zeros((0,), dtype))
+    offs = np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
+    return flat, offs
+
+
+def _oracle_sort(vals, offs):
+    return engine.segment_sort_oracle(vals, offs)
+
+
+def _oracle_merge(a, ao, b, bo):
+    out = []
+    for s in range(ao.shape[0] - 1):
+        u = np.concatenate([a[ao[s]:ao[s + 1]], b[bo[s]:bo[s + 1]]])
+        out.append(np.sort(u)[::-1])
+    return np.concatenate(out) if out else np.zeros((0,), a.dtype)
+
+
+# --------------------------------------------------------------------------
+# segment_sort / segment_merge vs per-segment oracles
+# --------------------------------------------------------------------------
+
+LENS = [
+    [7, 0, 19, 1, 64],          # ragged with empties
+    [0, 0, 0],                  # all empty
+    [128],                      # single segment
+    [1] * 17,                   # many tiny
+    [33, 512, 2, 0, 100],       # long + empty mix
+]
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+@pytest.mark.parametrize("lens", LENS)
+@pytest.mark.parametrize("variant",
+                         ["pallas_fused", "pallas_two_phase", "xla"])
+def test_segment_sort_matches_oracle(dtype, lens, variant):
+    vals, offs = _ragged(lens, dtype)
+    got = np.array(engine.segment_sort(jnp.array(vals), jnp.array(offs),
+                                       variant=variant))
+    np.testing.assert_array_equal(got, _oracle_sort(vals, offs))
+    assert got.dtype == dtype
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+@pytest.mark.parametrize("la,lb", [
+    ([5, 0, 33, 7], [3, 9, 0, 64]),
+    ([0, 0], [0, 5]),
+    ([100], [1]),
+    ([0], [0]),
+    ([1, 2, 3, 4, 5, 6, 7, 8], [8, 7, 6, 5, 4, 3, 2, 1]),
+])
+@pytest.mark.parametrize("variant", ["pallas", "xla"])
+def test_segment_merge_matches_oracle(dtype, la, lb, variant):
+    a, ao = _ragged(la, dtype, sort_desc=True)
+    b, bo = _ragged(lb, dtype, sort_desc=True)
+    got = np.array(engine.segment_merge(jnp.array(a), jnp.array(ao),
+                                        jnp.array(b), jnp.array(bo),
+                                        variant=variant))
+    np.testing.assert_array_equal(got, _oracle_merge(a, ao, b, bo))
+
+
+def test_segment_merge_heavy_duplicates_across_blocks():
+    """Duplicate keys crossing (segment, block) partition boundaries."""
+    la, lb = [600, 0, 900], [400, 50, 1100]
+    a, ao = _ragged(la, np.int32, sort_desc=True, lo=0, hi=3)
+    b, bo = _ragged(lb, np.int32, sort_desc=True, lo=0, hi=3)
+    got = np.array(segmented_merge_pallas(
+        jnp.array(a), jnp.array(ao), jnp.array(b), jnp.array(bo),
+        w=16, block_out=64))
+    np.testing.assert_array_equal(got, _oracle_merge(a, ao, b, bo))
+
+
+def test_segment_sort_ascending():
+    vals, offs = _ragged([9, 0, 30], np.float32)
+    got = np.array(engine.segment_sort(jnp.array(vals), jnp.array(offs),
+                                       descending=False))
+    exp = np.concatenate([np.sort(vals[offs[s]:offs[s + 1]])
+                          for s in range(3)])
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_segment_sort_single_pallas_call(monkeypatch):
+    """The fused variant must issue exactly one pallas_call."""
+    from jax.experimental import pallas as pl
+    calls = []
+    orig = pl.pallas_call
+
+    def counting(*a, **k):
+        calls.append(k.get("name", ""))
+        return orig(*a, **k)
+
+    monkeypatch.setattr(pl, "pallas_call", counting)
+    vals, offs = _ragged([40, 0, 17], np.int32)
+    got = np.array(segment_sort_pallas(jnp.array(vals), jnp.array(offs)))
+    np.testing.assert_array_equal(got, _oracle_sort(vals, offs))
+    assert len(calls) == 1 and calls[0] == "flims_segment_sort"
+
+
+def test_segment_merge_single_pallas_call(monkeypatch):
+    from jax.experimental import pallas as pl
+    calls = []
+    orig = pl.pallas_call
+
+    def counting(*a, **k):
+        calls.append(k.get("name", ""))
+        return orig(*a, **k)
+
+    monkeypatch.setattr(pl, "pallas_call", counting)
+    a, ao = _ragged([20, 0, 70], np.int32, sort_desc=True)
+    b, bo = _ragged([5, 31, 0], np.int32, sort_desc=True)
+    got = np.array(segmented_merge_pallas(jnp.array(a), jnp.array(ao),
+                                          jnp.array(b), jnp.array(bo), w=8))
+    np.testing.assert_array_equal(got, _oracle_merge(a, ao, b, bo))
+    assert len(calls) == 1 and calls[0] == "flims_segmented_merge"
+
+
+def test_segment_ops_under_jit_with_traced_offsets():
+    """Offsets may be traced (MoE dispatch): cap falls back to next_pow2(N)
+    unless passed explicitly."""
+    vals, offs = _ragged([6, 10, 0, 16], np.int32)
+
+    @jax.jit
+    def run(v, o):
+        return engine.segment_sort(v, o, cap=32)
+
+    got = np.array(run(jnp.array(vals), jnp.array(offs)))
+    np.testing.assert_array_equal(got, _oracle_sort(vals, offs))
+
+
+def test_segment_sort_rejects_truncating_cap():
+    """cap smaller than the longest segment must error, not silently drop
+    elements (regression: engine.segment_sort(arange(100), [0,100], cap=64)
+    returned garbage)."""
+    v = jnp.arange(100, dtype=jnp.int32)
+    with pytest.raises(ValueError, match="longest segment"):
+        engine.segment_sort(v, jnp.array([0, 100], jnp.int32), cap=64)
+    # a covering cap still works (rounded up to a power of two)
+    got = np.array(engine.segment_sort(v, jnp.array([0, 100], jnp.int32),
+                                       cap=100))
+    np.testing.assert_array_equal(got, np.arange(100)[::-1])
+
+
+def test_validate_offsets_rejects_bad():
+    vals = jnp.arange(5)
+    with pytest.raises(ValueError):
+        engine.segment_sort(vals, jnp.array([0, 3], jnp.int32))  # span != N
+    with pytest.raises(ValueError):
+        engine.segment_sort(vals, jnp.array([0, 4, 2, 5], jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# flat ops route correctly
+# --------------------------------------------------------------------------
+
+def test_flat_ops_match_numpy():
+    x = RNG.integers(-99, 99, 777).astype(np.int32)
+    np.testing.assert_array_equal(np.array(engine.sort(jnp.array(x))),
+                                  np.sort(x)[::-1])
+    np.testing.assert_array_equal(
+        np.array(engine.argsort(jnp.array(x), descending=False)),
+        np.argsort(x, kind="stable"))
+    a = np.sort(RNG.integers(-99, 99, 100))[::-1].astype(np.int32).copy()
+    b = np.sort(RNG.integers(-99, 99, 55))[::-1].astype(np.int32).copy()
+    np.testing.assert_array_equal(
+        np.array(engine.merge(jnp.array(a), jnp.array(b))),
+        np.sort(np.concatenate([a, b]))[::-1])
+    v, i = engine.topk(jnp.array(x), 9)
+    ev, ei = jax.lax.top_k(jnp.array(x), 9)
+    np.testing.assert_array_equal(np.array(v), np.array(ev))
+    np.testing.assert_array_equal(np.array(i), np.array(ei))
+
+
+def test_argsort_batched_rows_stable():
+    xb = RNG.integers(0, 4, (5, 64)).astype(np.int32)
+    for variant in engine.registry.variants("argsort"):
+        got = np.array(engine.argsort(jnp.array(xb), descending=False,
+                                      variant=variant))
+        np.testing.assert_array_equal(
+            got, np.argsort(xb, axis=-1, kind="stable"), err_msg=variant)
+
+
+def test_merge_variants_agree():
+    a = np.sort(RNG.integers(0, 9, 300))[::-1].astype(np.int32).copy()
+    b = np.sort(RNG.integers(0, 9, 170))[::-1].astype(np.int32).copy()
+    exp = np.sort(np.concatenate([a, b]))[::-1]
+    for variant in engine.registry.variants("merge"):
+        got = np.array(engine.merge(jnp.array(a), jnp.array(b),
+                                    variant=variant))
+        np.testing.assert_array_equal(got, exp, err_msg=variant)
+
+
+# --------------------------------------------------------------------------
+# planner: cache, heuristics, JSON round-trip, autotune
+# --------------------------------------------------------------------------
+
+def test_plan_key_buckets_shapes():
+    k1 = plan_key("sort", n=1000, dtype=np.float32, backend="cpu")
+    k2 = plan_key("sort", n=1024, dtype=np.float32, backend="cpu")
+    k3 = plan_key("sort", n=1025, dtype=np.float32, backend="cpu")
+    assert k1 == k2 and k2 != k3
+
+
+def test_heuristic_backend_split():
+    key_cpu = plan_key("argsort", n=4096, dtype=np.int32, backend="cpu")
+    key_tpu = plan_key("argsort", n=4096, dtype=np.int32, backend="tpu")
+    assert heuristic_plan("argsort", key_cpu).variant == "xla"
+    assert heuristic_plan("argsort", key_tpu).variant == "flims"
+
+
+def test_planner_cache_and_json_roundtrip(tmp_path):
+    pl_ = Planner()
+    key = plan_key("merge", n=5000, dtype=np.float32, backend="cpu")
+    plan = Plan("pallas", w=64, block_out=2048, chunk=512, cap=0)
+    pl_.put(key, plan)
+    path = tmp_path / "plans.json"
+    pl_.save(str(path))
+    doc = json.loads(path.read_text())
+    assert doc["version"] == 1 and len(doc["plans"]) == 1
+    fresh = Planner()
+    fresh.load(str(path))
+    assert fresh.lookup(key) == plan
+    # plan_for returns the cached entry, not the heuristic
+    assert fresh.plan_for("merge", n=5000, dtype=np.float32,
+                          backend="cpu") == plan
+
+
+def test_autotune_roundtrip(tmp_path):
+    vals, offs = _ragged([30, 0, 80, 7], np.float32)
+    engine.clear_plans()
+    plan = engine.autotune("segment_sort", jnp.array(vals), jnp.array(offs),
+                           repeats=1)
+    assert plan.variant in engine.registry.variants("segment_sort")
+    key = plan_key("segment_sort", n=vals.shape[0], dtype=np.float32,
+                   segments=4)
+    assert engine.default_planner.lookup(key) == plan
+    path = tmp_path / "plans.json"
+    engine.save_plans(str(path))
+    engine.clear_plans()
+    engine.load_plans(str(path))
+    assert engine.default_planner.lookup(key) == plan
+    # and the tuned plan actually serves the op
+    got = np.array(engine.segment_sort(jnp.array(vals), jnp.array(offs)))
+    np.testing.assert_array_equal(got, _oracle_sort(vals, offs))
+    engine.clear_plans()
+
+
+def test_explicit_plan_wins():
+    x = RNG.integers(-9, 9, 64).astype(np.int32)
+    got = np.array(engine.sort(jnp.array(x),
+                               plan=Plan("ref", w=8, chunk=32)))
+    np.testing.assert_array_equal(got, np.sort(x)[::-1])
+
+
+# --------------------------------------------------------------------------
+# segment helpers
+# --------------------------------------------------------------------------
+
+def test_pad_unpad_roundtrip():
+    vals, offs = _ragged([3, 0, 9, 1], np.int32)
+    bank = engine.pad_segments(jnp.array(vals), jnp.array(offs), 16)
+    assert bank.shape == (4, 16)
+    back = np.array(engine.unpad_segments(bank, jnp.array(offs),
+                                          vals.shape[0]))
+    np.testing.assert_array_equal(back, vals)
+
+
+def test_segment_ids():
+    offs = jnp.array([0, 2, 2, 5], jnp.int32)
+    ids = np.array(engine.segment_ids(offs, 5))
+    np.testing.assert_array_equal(ids, [0, 0, 2, 2, 2])

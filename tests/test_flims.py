@@ -8,7 +8,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # deterministic fallback sweep (see the module)
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import (basic_merge, bitonic_sort, butterfly_sort,
                         flims_merge, flims_merge_banked,

@@ -89,3 +89,49 @@ def test_merge_wrapper_dispatch():
     got = np.array(merge(a, b, w=32))
     exp = np.array(merge_ref(a, b))
     np.testing.assert_array_equal(got, exp)
+
+
+# --------------------------------------------------------------------------
+# flims_merge_pallas edge cases (vs the flims_merge_ref oracle)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nA,nB", [(0, 0), (0, 7), (11, 0), (1, 0), (0, 1)])
+def test_merge_kernel_empty_one_sided(nA, nB):
+    a = _desc(RNG.integers(-99, 99, nA).astype(np.int32))
+    b = _desc(RNG.integers(-99, 99, nB).astype(np.int32))
+    got = np.array(flims_merge_pallas(jnp.array(a), jnp.array(b), w=8))
+    np.testing.assert_array_equal(got, np.sort(np.concatenate([a, b]))[::-1])
+
+
+@pytest.mark.parametrize("nA,nB,w", [(1, 1, 8), (3, 2, 32), (5, 5, 128),
+                                     (1, 0, 16)])
+def test_merge_kernel_w_exceeds_input(nA, nB, w):
+    """w larger than the whole problem: one selector cycle, prefix-trim."""
+    a = _desc(RNG.integers(-9, 9, nA).astype(np.int32))
+    b = _desc(RNG.integers(-9, 9, nB).astype(np.int32))
+    got = np.array(flims_merge_pallas(jnp.array(a), jnp.array(b), w=w))
+    np.testing.assert_array_equal(got, np.sort(np.concatenate([a, b]))[::-1])
+
+
+@pytest.mark.parametrize("dtype", [np.int8, np.int16, np.int32])
+def test_merge_kernel_integer_dtypes(dtype):
+    lo, hi = int(np.iinfo(dtype).min), int(np.iinfo(dtype).max)
+    a = _desc(RNG.integers(lo, hi, 200, endpoint=True).astype(dtype))
+    b = _desc(RNG.integers(lo, hi, 333, endpoint=True).astype(dtype))
+    got = np.array(flims_merge_pallas(jnp.array(a), jnp.array(b), w=16,
+                                      block_out=128))
+    np.testing.assert_array_equal(got, np.sort(np.concatenate([a, b]))[::-1])
+    assert got.dtype == dtype
+
+
+@pytest.mark.parametrize("w,block_out", [(8, 64), (32, 256), (64, 4096)])
+def test_merge_kernel_heavy_duplicates_vs_ref_oracle(w, block_out):
+    """Tie semantics under heavy duplicates: the kernel must equal the
+    sorted-space reference formulation element-for-element."""
+    from repro.core.flims import flims_merge_ref
+    a = _desc(RNG.choice([0, 1], 2000).astype(np.int32))
+    b = _desc(RNG.choice([0, 1], 1500).astype(np.int32))
+    got = np.array(flims_merge_pallas(jnp.array(a), jnp.array(b), w=w,
+                                      block_out=block_out))
+    exp = np.array(flims_merge_ref(jnp.array(a), jnp.array(b), w))
+    np.testing.assert_array_equal(got, exp)

@@ -3,7 +3,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # deterministic fallback sweep (see the module)
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import (flims_argsort, flims_sort, flims_sort_kv, flims_topk,
                         merge_k, pmt_merge, sort_chunks)
@@ -96,3 +100,25 @@ def test_pack_by_length():
     assert all(v <= 1000 for v in fills.values())
     # next-fit-decreasing on this instance packs into 4 bins (optimal: 3)
     assert len(fills) <= 4
+
+
+def test_merge_k_empty_dtype():
+    """merge_k([]) honours the requested dtype (regression: always f32)."""
+    from repro.core.merge_tree import merge_k as mk
+    assert mk([], dtype=jnp.int32).dtype == jnp.int32
+    assert mk([]).dtype == jnp.float32
+    assert mk([jnp.zeros((0,), jnp.int16)]).dtype == jnp.int16
+    assert mk([jnp.array([3, 1], jnp.int16)]).dtype == jnp.int16
+
+
+def test_pmt_merge_padded_enforces_counts():
+    """counts/valid_is_count are honoured: garbage beyond the valid region
+    must not leak into the merged prefix (sentinel contract)."""
+    from repro.core.merge_tree import pmt_merge_padded
+    rows = jnp.array([[9, 5, 777, 777], [8, 2, 1, 777]], jnp.int32)
+    counts = jnp.array([2, 3], jnp.int32)
+    out = np.array(pmt_merge_padded(rows, counts, w=4))
+    np.testing.assert_array_equal(out[:5], [9, 8, 5, 2, 1])
+    mask = jnp.array([[1, 1, 0, 0], [1, 1, 1, 0]], bool)
+    out2 = np.array(pmt_merge_padded(rows, mask, w=4, valid_is_count=False))
+    np.testing.assert_array_equal(out2[:5], [9, 8, 5, 2, 1])
