@@ -1,0 +1,45 @@
+"""Engine argsort: scan-based FLiMS lanes vs Pallas KV kernels vs XLA.
+
+The PR-2 payload-lane comparison: the same stable permutation computed by
+(1) the pure-JAX lane scan (``flims``), (2) the KV Pallas kernel pipeline
+(``pallas`` — chunk KV sort + partitioned KV merges; interpreted off-TPU),
+and (3) ``jnp.argsort(stable=True)``; plus the ragged ``segment_argsort``
+variants on the uniform MoE-dispatch shape.
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro import engine
+
+
+def run():
+    out = []
+    rng = np.random.default_rng(5)
+    for n in (2048, 8192):
+        x = jnp.array(rng.integers(0, 64, n).astype(np.int32))
+        us = {}
+        for variant in engine.registry.variants("argsort"):
+            fn = jax.jit(lambda k, var=variant: engine.argsort(
+                k, descending=False, variant=var))
+            us[variant] = time_fn(fn, x)
+        best = min(us.values())
+        for v, u in us.items():
+            out.append(row(f"argsort/{v}/n{n}", u,
+                           f"n={n};vs_best={u / best:.2f}"))
+    # ragged segment_argsort on the MoE-dispatch shape (uniform segments)
+    S, L = 8, 2048
+    keys = jnp.array(rng.integers(0, 8, S * L).astype(np.int32))
+    offs = jnp.arange(S + 1, dtype=jnp.int32) * L
+    us = {}
+    for variant in engine.registry.variants("segment_argsort"):
+        fn = jax.jit(lambda k, o, var=variant: engine.segment_argsort(
+            k, o, descending=False, cap=L, variant=var))
+        us[variant] = time_fn(fn, keys, offs)
+    best = min(us.values())
+    for v, u in us.items():
+        out.append(row(f"segment_argsort/{v}", u,
+                       f"S={S};N={S * L};cap={L};vs_best={u / best:.2f}"))
+    return out

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from benchmarks.common import row, time_fn
 from repro import engine
 from repro.configs import get_config
-from repro.models.moe import moe_apply_dense, moe_apply_sorted, moe_init
+from repro.models.moe import (moe_apply_dense, moe_apply_grouped,
+                              moe_apply_sorted, moe_init)
 
 
 def run():
@@ -41,7 +42,7 @@ def run():
     out.append(row("moe/sorted_e8k2_flims_argsort", ub,
                    f"path=sorted;argsort=flims;vs_dense={ud / ub:.2f}"))
 
-    # 'after': let the planner choose (XLA on CPU, FLiMS on TPU)
+    # 'after': let the planner choose (XLA on CPU, FLiMS/Pallas on TPU)
     engine.default_planner.clear()
     js_after = jax.jit(lambda x: moe_apply_sorted(p, x, cfg))
     ua = time_fn(js_after, x)
@@ -49,6 +50,18 @@ def run():
     out.append(row("moe/sorted_e8k2_engine", ua,
                    f"path=sorted;argsort={plan.variant if plan else 'n/a'};"
                    f"vs_dense={ud / ua:.2f};vs_before={ub / ua:.2f}"))
+
+    # PR-2 dispatch path: the grouped route orders every device group's
+    # (token, expert) pairs via one ragged engine.segment_argsort KV call
+    jg = jax.jit(lambda x: moe_apply_grouped(p, x, cfg))
+    ug = time_fn(jg, x)
+    splan = next((engine.Plan.from_dict(pd)
+                  for ks, pd in engine.default_planner.to_table().items()
+                  if ks.startswith("segment_argsort|")), None)
+    out.append(row("moe/grouped_e8k2_segment_argsort", ug,
+                   f"path=grouped;dispatch=segment_argsort"
+                   f";variant={splan.variant if splan else 'n/a'};"
+                   f"vs_dense={ud / ug:.2f}"))
 
     # the dispatch sort in isolation: planner's variant swap, same key shape
     e_keys = jnp.array(np.random.default_rng(2).integers(

@@ -15,21 +15,25 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write rows as structured JSON")
     ap.add_argument("--only", default=None,
-                    help="run only sections whose module name contains this")
+                    help="run only sections whose module name contains one "
+                         "of these comma-separated substrings")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig14_w_sweep, fig15_full_sort, kernel_merge,
-                            merge_tree_bench, moe_dispatch, skew_balance,
-                            table2_comparators)
+    from benchmarks import (argsort_bench, fig14_w_sweep, fig15_full_sort,
+                            kernel_merge, merge_tree_bench, moe_dispatch,
+                            skew_balance, table2_comparators)
     sections = [(table2_comparators, "Table 2 (comparator counts)"),
                 (fig14_w_sweep, "Fig 14 (throughput vs w)"),
                 (fig15_full_sort, "Fig 15 (complete sort)"),
                 (skew_balance, "S4.1 (skewness optimisation)"),
                 (merge_tree_bench, "S2.1 (parallel merge tree)"),
                 (kernel_merge, "Pallas kernels (interpret)"),
+                (argsort_bench, "Argsort variants (payload lanes)"),
                 (moe_dispatch, "MoE dispatch via repro.engine")]
     if args.only:
-        sections = [(m, l) for m, l in sections if args.only in m.__name__]
+        keys = [s.strip() for s in args.only.split(",") if s.strip()]
+        sections = [(m, l) for m, l in sections
+                    if any(k in m.__name__ for k in keys)]
 
     records = []
     print("name,us_per_call,derived")

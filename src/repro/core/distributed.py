@@ -13,6 +13,12 @@ Output: device p holds the p-th descending value range, i.e. the mesh-order
 concatenation is globally sorted. Buckets are sentinel-padded to a fixed cap
 (collectives need static shapes); `counts` reports true sizes and `overflow`
 flags cap overruns (re-run with a larger cap — the launcher does this).
+
+Payload lanes ride the whole pipeline natively: with ``payload=`` (a pytree
+of same-length 1-D arrays) the local sort is the engine's stable KV sort,
+every bucket exchange all_to_alls the payload rows alongside the keys, and
+the final reduction is the stable KV merge tree (``pmt_merge_kv``) — a
+distributed argsort is just ``payload=global_indices``.
 """
 from __future__ import annotations
 
@@ -26,7 +32,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import engine
 from repro.core.flims import sentinel_for
-from repro.core.merge_tree import pmt_merge
+from repro.core.merge_tree import pmt_merge, pmt_merge_kv_padded
 from repro.core.mergesort import _next_pow2
 
 
@@ -36,12 +42,21 @@ class ShardedSort(NamedTuple):
     overflow: jnp.ndarray # () bool: some bucket exceeded the cap
 
 
-def _local_pass(xl: jnp.ndarray, axis_name: str, n_dev: int, cap: int,
-                w: int) -> ShardedSort:
+def _local_pass(xl: jnp.ndarray, payload, axis_name: str, n_dev: int,
+                cap: int, w: int):
     n_local = xl.shape[0]
     # descending local sort through the engine (planner picks the variant;
-    # an explicit plan pins the FLiMS reference dataflow's w)
-    loc = engine.sort(xl, plan=engine.Plan("ref", w=w, chunk=512))
+    # an explicit plan pins the FLiMS reference dataflow's w). With payload
+    # lanes the stable KV path permutes keys and payload together.
+    if payload is None:
+        loc = engine.sort(xl, plan=engine.Plan("ref", w=w, chunk=512))
+        ploc = None
+    else:
+        # pin the pure-JAX lane argsort: honours w and stays shard_map-safe
+        # (the KV sort routes through the argsort op, so the plan names an
+        # argsort variant)
+        loc, ploc = engine.sort(xl, values=payload, stable=True,
+                                plan=engine.Plan("flims", w=w, chunk=512))
     # --- splitters from regular sampling -----------------------------------
     step = max(n_local // n_dev, 1)
     samples = loc[::step][:n_dev]
@@ -60,36 +75,69 @@ def _local_pass(xl: jnp.ndarray, axis_name: str, n_dev: int, cap: int,
     sent = sentinel_for(loc.dtype)
     pos = bounds[:-1][:, None] + jnp.arange(cap)[None, :]         # (P, cap)
     valid = jnp.arange(cap)[None, :] < jnp.minimum(sizes, cap)[:, None]
-    send = jnp.where(valid, loc[jnp.clip(pos, 0, n_local - 1)], sent)
+    src = jnp.clip(pos, 0, n_local - 1)
+    send = jnp.where(valid, loc[src], sent)
     # --- exchange -----------------------------------------------------------
     recv = lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0,
                           tiled=True)                             # (P, cap)
     cnt = lax.all_to_all(jnp.minimum(sizes, cap), axis_name,
                          split_axis=0, concat_axis=0, tiled=True)
+    if payload is not None:
+        # payload rows exchange natively beside the keys; validity is
+        # governed by counts, so out-of-range rows need no masking.
+        precv = jax.tree.map(
+            lambda pv: lax.all_to_all(pv[src], axis_name, split_axis=0,
+                                      concat_axis=0, tiled=True), ploc)
     # --- k-way FLiMS merge of the received runs -----------------------------
     k_pad = _next_pow2(recv.shape[0])
     if k_pad != recv.shape[0]:
+        grow = k_pad - recv.shape[0]
         recv = jnp.concatenate(
-            [recv, jnp.full((k_pad - recv.shape[0], cap), sent, loc.dtype)])
-    merged = pmt_merge(recv, w=min(w, _next_pow2(cap)))
+            [recv, jnp.full((grow, cap), sent, loc.dtype)])
+        if payload is not None:
+            precv = jax.tree.map(
+                lambda pv: jnp.concatenate(
+                    [pv, jnp.zeros((grow, cap), pv.dtype)]), precv)
     any_ovf = lax.pmax(overflow.astype(jnp.int32), axis_name)
-    return ShardedSort(merged, jnp.sum(cnt).reshape(1),
-                       any_ovf.astype(bool).reshape(1))
+    if payload is None:
+        merged = pmt_merge(recv, w=min(w, _next_pow2(cap)))
+        return ShardedSort(merged, jnp.sum(cnt).reshape(1),
+                           any_ovf.astype(bool).reshape(1))
+    # validity-aware KV merge: padding must sort behind *real* sentinel-
+    # valued keys or its garbage payload would land inside the count prefix
+    cnt_pad = jnp.concatenate(
+        [cnt, jnp.zeros((k_pad - cnt.shape[0],), cnt.dtype)])
+    merged, pmerged = pmt_merge_kv_padded(recv, cnt_pad, precv,
+                                          w=min(w, _next_pow2(cap)))
+    return (ShardedSort(merged, jnp.sum(cnt).reshape(1),
+                        any_ovf.astype(bool).reshape(1)), pmerged)
 
 
 @partial(jax.jit, static_argnames=("mesh", "axis", "w", "cap_factor"))
 def sample_sort(x: jnp.ndarray, mesh, axis: str = "data", w: int = 32,
-                cap_factor: int = 4) -> ShardedSort:
+                cap_factor: int = 4, payload=None):
     """Sort a 1-D array sharded over ``axis`` of ``mesh``. Descending.
 
     Returns per-device padded runs; `values` with spec P(axis) concatenates to
-    the global descending order.
+    the global descending order. With ``payload=`` (a pytree of 1-D arrays of
+    ``x``'s length, sharded the same way) returns ``(ShardedSort, payload)``
+    where each payload leaf is the (P*cap,)-per-device array permuted
+    identically to `values` — keys and payloads exchange natively, and ties
+    keep their input order (stable, paper algorithm 3).
     """
     n_dev = mesh.shape[axis]
     n_local = x.shape[0] // n_dev
     cap = min(n_local, cap_factor * max(n_local // n_dev, 1))
+    if payload is None:
+        fn = partial(_local_pass, payload=None, axis_name=axis, n_dev=n_dev,
+                     cap=cap, w=w)
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=P(axis),
+            out_specs=ShardedSort(P(axis), P(axis), P(axis)),
+            check_vma=False)(x)
     fn = partial(_local_pass, axis_name=axis, n_dev=n_dev, cap=cap, w=w)
+    pspec = jax.tree.map(lambda _: P(axis), payload)
     return jax.shard_map(
-        fn, mesh=mesh, in_specs=P(axis),
-        out_specs=ShardedSort(P(axis), P(axis), P(axis)),
-        check_vma=False)(x)
+        fn, mesh=mesh, in_specs=(P(axis), pspec),
+        out_specs=(ShardedSort(P(axis), P(axis), P(axis)), pspec),
+        check_vma=False)(x, payload)

@@ -22,33 +22,31 @@ Variants (paper §4):
 - tie='skew'     skewness optimisation (algorithm 2: oscillating ``dir`` bit),
 - ``flims_merge_kv_stable`` stable merge with payloads (algorithm 3,
   generalised: instead of packing source/order/port bits into the MSB we carry
-  (key, src, rank) through the selector and CAS network — the paper notes the
+  (key, rank) through the selector and CAS network — the paper notes the
   bit-packing "emulates appending the original input order to the MSB", which
-  is exactly what the rank field does exactly).
+  is exactly what the rank lane does explicitly).
+
+The selector, comparators, and the generic lane-merge live in
+`core/lanes.py`; the functions here are the paper-named wrappers over that
+single core (key-only lanes for algorithms 1/2, key+rank+val lanes for
+algorithm 3).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.butterfly import butterfly_sort
+from repro.core.lanes import (KEY, VAL, flims_cycle, key_compare, make_lanes,
+                              merge_lanes, sentinel_for, stable_compare)
 
 
 # --------------------------------------------------------------------------
 # helpers
 # --------------------------------------------------------------------------
-
-def sentinel_for(dtype) -> Any:
-    """Value that sorts last in descending order (never strictly wins)."""
-    dtype = jnp.dtype(dtype)
-    if jnp.issubdtype(dtype, jnp.floating):
-        return jnp.array(-jnp.inf, dtype)
-    return jnp.array(jnp.iinfo(dtype).min, dtype)
-
 
 def _cdiv(a: int, b: int) -> int:
     return -(-a // b)
@@ -75,33 +73,14 @@ def _pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
 def flims_merge_ref(a: jnp.ndarray, b: jnp.ndarray, w: int = 128) -> jnp.ndarray:
     """Merge two descending-sorted 1-D arrays; returns descending merged array.
 
-    Per iteration (= hardware cycle): load the next ``w`` candidates of each
-    list, run the MAX selector on (sA, reverse(sB)) — the half-cleaner of a
-    2w bitonic partial merger — and butterfly-sort the resulting bitonic
-    vector into the next w-sized output chunk (paper fig. 9).
+    Key-only lanes through `lanes.merge_lanes`: per iteration (= hardware
+    cycle), the MAX selector on (sA, reverse(sB)) — the half-cleaner of a
+    2w bitonic partial merger — then the butterfly CAS network (paper fig. 9).
+    Ties dequeue from B (algorithm 1).
     """
     assert a.ndim == b.ndim == 1
-    assert w & (w - 1) == 0
-    n_out = a.shape[0] + b.shape[0]
-    if n_out == 0:
-        return jnp.zeros((0,), a.dtype)
-    cycles = _cdiv(n_out, w)
-    # Pointers never pass cycles*w; pad so every w-slice is in range.
-    a_p = _pad_to(a, cycles * w + w)
-    b_p = _pad_to(b, cycles * w + w)
-
-    def body(carry, _):
-        pA, pB = carry
-        sA = lax.dynamic_slice(a_p, (pA,), (w,))
-        sBr = lax.dynamic_slice(b_p, (pB,), (w,))[::-1]
-        mask = sA > sBr                      # ties prefer B (algorithm 1)
-        k = jnp.sum(mask)
-        chunk = butterfly_sort(jnp.maximum(sA, sBr))
-        return (pA + k, pB + (w - k)), chunk
-
-    (_, _), chunks = lax.scan(body, (jnp.int32(0), jnp.int32(0)), None,
-                              length=cycles)
-    return chunks.reshape(-1)[:n_out]
+    out = merge_lanes(make_lanes(a), make_lanes(b), w=w, compare=key_compare)
+    return out[KEY]
 
 
 # --------------------------------------------------------------------------
@@ -151,16 +130,15 @@ def flims_merge_banked(a: jnp.ndarray, b: jnp.ndarray, w: int = 128,
     def body(carry, _):
         WA, WB, lA, lB, rA, rB, dirb = carry
         cA = heads(WA, lA)
-        cB = heads(WB, lB)
-        cBr = cB[::-1]                         # MAX_i pairs a_i with b_{w-1-i}
+        cBr = heads(WB, lB)[::-1]              # MAX_i pairs a_i with b_{w-1-i}
         if tie == "b":
-            mask = cA > cBr
+            sel_cmp = key_compare
         else:  # skew: {cA,dir} > {cB,!dir}  → on ties take A iff dir==1
-            mask = (cA > cBr) | ((cA == cBr) & dirb)
-        in_vec = jnp.where(mask, cA, cBr)      # rotated bitonic (proof §5.1-2)
-        chunk = butterfly_sort(in_vec)
-        k = jnp.sum(mask.astype(jnp.int32))
-        dirb = ~mask                           # alg.2: took A → dir=0
+            sel_cmp = lambda x, y: (x > y) | ((x == y) & dirb)
+        chunk, take_a = flims_cycle(cA, cBr, key_compare,
+                                    select_compare=sel_cmp)
+        k = jnp.sum(take_a.astype(jnp.int32))
+        dirb = ~take_a                         # alg.2: took A → dir=0
         WA, lA, rA = advance(WA, ra, lA, rA, k)
         WB, lB, rB = advance(WB, rb, lB, rB, w - k)
         return (WA, WB, lA, lB, rA, rB, dirb), (chunk, k)
@@ -178,65 +156,26 @@ def flims_merge_banked(a: jnp.ndarray, b: jnp.ndarray, w: int = 128,
 # stable key/value merge (paper algorithm 3, generalised)
 # --------------------------------------------------------------------------
 
-def _stable_first(x, y):
-    """True where x must precede y: key desc, then src asc, then rank asc."""
-    kx, sx, rx = x["key"], x["src"], x["rank"]
-    ky, sy, ry = y["key"], y["src"], y["rank"]
-    return (kx > ky) | ((kx == ky) & ((sx < sy) | ((sx == sy) & (rx < ry))))
-
-
 @partial(jax.jit, static_argnames=("w",))
 def flims_merge_kv_stable(keys_a, vals_a, keys_b, vals_b, w: int = 128):
     """Stable descending merge of (key, value) lists; A's duplicates first.
 
     vals_* is a pytree of (n,)-shaped arrays carried through the network.
     Returns (merged_keys, merged_vals).
+
+    The (src, local-rank) tiebreak of paper algorithm 3 is encoded as one
+    global rank lane — A gets ranks ``0..nA-1``, B gets ``nA..nA+nB-1`` — so
+    `lanes.stable_compare` orders ties A-first, then by input position.
     """
     assert keys_a.ndim == keys_b.ndim == 1
     nA, nB = keys_a.shape[0], keys_b.shape[0]
-    n_out = nA + nB
-    if n_out == 0:
+    if nA + nB == 0:
         return keys_a, vals_a
-    cycles = _cdiv(n_out, w)
-    npad = cycles * w + w
-    big = jnp.int32(npad + 1)
-
-    def prep(keys, vals, src):
-        k = _pad_to(keys, npad)
-        v = jax.tree.map(lambda x: jnp.pad(x, (0, npad - x.shape[0])), vals)
-        s = jnp.full((npad,), src, jnp.int32)
-        r = jnp.where(jnp.arange(npad) < keys.shape[0],
-                      jnp.arange(npad, dtype=jnp.int32), big)
-        return k, v, s, r
-
-    ka, va, sa, rka = prep(keys_a, vals_a, 0)
-    kb, vb, sb, rkb = prep(keys_b, vals_b, 1)
-
-    def slice_at(k, v, s, r, p, rev):
-        out = {"key": lax.dynamic_slice(k, (p,), (w,)),
-               "src": lax.dynamic_slice(s, (p,), (w,)),
-               "rank": lax.dynamic_slice(r, (p,), (w,)),
-               "val": jax.tree.map(
-                   lambda x: lax.dynamic_slice(x, (p,), (w,)), v)}
-        if rev:
-            out = jax.tree.map(lambda x: x[::-1], out)
-        return out
-
-    def body(carry, _):
-        pA, pB = carry
-        A = slice_at(ka, va, sa, rka, pA, False)
-        B = slice_at(kb, vb, sb, rkb, pB, True)
-        take_a = _stable_first(A, B)           # selector with stable priority
-        k = jnp.sum(take_a.astype(jnp.int32))
-        sel = jax.tree.map(lambda x, y: jnp.where(take_a, x, y), A, B)
-        chunk = butterfly_sort(sel, compare=_stable_first)
-        return (pA + k, pB + (w - k)), chunk
-
-    (_, _), chunks = lax.scan(body, (jnp.int32(0), jnp.int32(0)), None,
-                              length=cycles)
-    flat = jax.tree.map(
-        lambda x: x.reshape((-1,) + x.shape[2:])[:n_out], chunks)
-    return flat["key"], flat["val"]
+    a = make_lanes(keys_a, rank=jnp.arange(nA, dtype=jnp.int32), val=vals_a)
+    b = make_lanes(keys_b, rank=nA + jnp.arange(nB, dtype=jnp.int32),
+                   val=vals_b)
+    out = merge_lanes(a, b, w=w, compare=stable_compare)
+    return out[KEY], out[VAL]
 
 
 # --------------------------------------------------------------------------

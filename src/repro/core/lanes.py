@@ -1,0 +1,182 @@
+"""Payload lanes: the one selector/compare core every FLiMS formulation shares.
+
+The paper's stable variant (algorithm 3) is not a different merger — it is the
+same selector + butterfly dataflow with *wider lanes*: alongside each key ride
+an int32 ``rank`` (original input order; doubles as the argsort output) and an
+arbitrary ``val`` payload pytree, and every comparator compares the compound
+``(key desc, rank asc)`` order instead of the bare key. The paper packs the
+source/order bits into the key's MSBs; carrying an explicit rank lane is the
+same construction without the bit-width gymnastics (see `core/flims.py`).
+
+This module is the single home of that machinery:
+
+- **lane sets** — a dict pytree ``{"key": arr[, "rank": int32 arr][, "val":
+  pytree]}``; every lane shares the trailing axis. ``make_lanes`` builds one,
+  ``pad_lanes`` extends it with elements that sort last under any comparator
+  here (sentinel keys, ``INVALID_RANK`` ranks).
+- **comparators** — ``key_compare`` (descending, ties free: algorithm 1) and
+  the canonical ``stable_compare`` (key desc, rank asc: algorithm 3). The
+  ``compare_for`` helper picks by lane presence.
+- **the selector** — ``flims_cycle``: one FLiMS hardware cycle, i.e. the MAX
+  selector on ``(A, reverse(B))`` followed by the butterfly CAS network
+  (paper fig. 9), generalised to lane sets.
+- **merge_lanes** — the sorted-space FLiMS merge over lane sets; the scalar
+  core that `flims_merge_ref` (key lanes), `flims_merge_kv_stable`
+  (key+rank+val lanes) and `flims_argsort` (key+rank lanes) all wrap.
+- **topk_node** — one selector+butterfly cycle mapping two descending k-lane
+  lists to the top-k of their union (the merge-tree node of `core/topk.py`).
+
+Everything downstream — the banked dataflow, the Pallas kernels' co-rank
+partition, the engine's KV ops — reuses these orders. Co-rank partitioning is
+payload-oblivious (the split point depends only on the compound comparator,
+never on ``val``), which is why the kernels only ever need one extra int32
+ref per input: ranks travel through the network, payloads are gathered once
+by the resulting permutation.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.butterfly import butterfly_sort
+
+KEY, RANK, VAL = "key", "rank", "val"
+
+#: rank given to padding: sorts after every real rank under ``rank asc``.
+INVALID_RANK = jnp.iinfo(jnp.int32).max
+
+Compare = Callable[[Any, Any], Any]
+
+
+def sentinel_for(dtype) -> Any:
+    """Key that sorts last in descending order (never strictly wins)."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).min, dtype)
+
+
+def make_lanes(keys, rank=None, val=None) -> Dict[str, Any]:
+    """Assemble a lane set. ``rank`` is cast to int32; ``val`` is any pytree
+    of arrays sharing ``keys``' trailing shape."""
+    lanes: Dict[str, Any] = {KEY: keys}
+    if rank is not None:
+        lanes[RANK] = jnp.asarray(rank, jnp.int32)
+    if val is not None:
+        lanes[VAL] = val
+    return lanes
+
+
+def key_compare(x, y):
+    """Descending key order, ties unresolved (selector then prefers the
+    *second* operand — paper algorithm 1's ties-to-B)."""
+    kx = x[KEY] if isinstance(x, dict) else x
+    ky = y[KEY] if isinstance(y, dict) else y
+    return kx > ky
+
+
+def stable_compare(x, y):
+    """The canonical lane order: key descending, then rank ascending.
+
+    This is paper algorithm 3's compound comparison with the packed
+    source/order bits replaced by the explicit rank lane; with ranks assigned
+    in input order it makes every network here a *stable* sorter.
+    """
+    kx, ky = x[KEY], y[KEY]
+    first = kx > ky
+    if isinstance(x, dict) and RANK in x:
+        first = first | ((kx == ky) & (x[RANK] < y[RANK]))
+    return first
+
+
+def compare_for(lanes) -> Compare:
+    """stable_compare when a rank lane is present, else key_compare."""
+    return stable_compare if (isinstance(lanes, dict) and RANK in lanes) \
+        else key_compare
+
+
+def pad_lanes(lanes, npad: int):
+    """Right-pad every lane to length ``npad`` with elements that sort last:
+    sentinel keys, INVALID_RANK ranks, zero payloads."""
+    n = lanes[KEY].shape[0]
+    out = {KEY: jnp.pad(lanes[KEY], (0, npad - n),
+                        constant_values=sentinel_for(lanes[KEY].dtype))}
+    if RANK in lanes:
+        out[RANK] = jnp.pad(lanes[RANK], (0, npad - n),
+                            constant_values=INVALID_RANK)
+    if VAL in lanes:
+        out[VAL] = jax.tree.map(lambda v: jnp.pad(v, (0, npad - n)),
+                                lanes[VAL])
+    return out
+
+
+def flims_cycle(a, b_rev, compare: Optional[Compare] = None,
+                select_compare: Optional[Compare] = None):
+    """One FLiMS cycle on lane sets (or plain arrays): MAX selector over
+    ``(a, b_rev)`` + butterfly sort of the rotated-bitonic result.
+
+    ``b_rev`` must already be the lane-reversed B candidates (MAX_i pairs
+    ``a_i`` with ``b_{w-1-i}``). Returns ``(chunk, take_a)`` where ``chunk``
+    is the next sorted w-wide output and ``take_a`` the selector mask (the
+    per-lane dequeue decision; ``sum(take_a)`` elements came from A).
+
+    ``select_compare`` overrides the comparator for the selector stage only
+    (algorithm 2's oscillating dir bit is positional, so it exists at the
+    selector but must not enter the CAS network).
+    """
+    compare = compare or compare_for(a)
+    take_a = (select_compare or compare)(a, b_rev)
+    sel = jax.tree.map(lambda x, y: jnp.where(take_a, x, y), a, b_rev)
+    return butterfly_sort(sel, compare=compare), take_a
+
+
+def topk_node(a, b, compare: Optional[Compare] = None):
+    """Top-k (sorted) of two descending k-lane-lists: one selector+butterfly
+    cycle over the trailing axis (the merge-tree node of `core/topk.py`)."""
+    compare = compare or compare_for(a)
+    b_rev = jax.tree.map(lambda x: x[..., ::-1], b)
+    take_a = compare(a, b_rev)
+    sel = jax.tree.map(lambda x, y: jnp.where(take_a, x, y), a, b_rev)
+    return butterfly_sort(sel, compare=compare)
+
+
+def merge_lanes(a, b, *, w: int = 128, compare: Optional[Compare] = None):
+    """Sorted-space FLiMS merge of two descending 1-D lane sets.
+
+    The generic scalar-pointer formulation (paper fig. 9 / §5.1): per cycle,
+    slice the next ``w`` candidates of each side, run ``flims_cycle`` on
+    ``(A, reverse(B))``, advance the pointers by the selector counts. With
+    key-only lanes and ``key_compare`` this is algorithm 1 (ties dequeue
+    from B); with rank lanes and ``stable_compare`` it is algorithm 3.
+    Returns the merged lane set of length ``len(a) + len(b)``.
+    """
+    assert a[KEY].ndim == b[KEY].ndim == 1
+    assert w & (w - 1) == 0
+    compare = compare or compare_for(a)
+    n_out = a[KEY].shape[0] + b[KEY].shape[0]
+    if n_out == 0:
+        return jax.tree.map(lambda x, y: jnp.concatenate([x, y]), a, b)
+    cycles = -(-n_out // w)
+    # pointers never pass cycles*w; pad so every w-slice is in range.
+    npad = cycles * w + w
+    ap = pad_lanes(a, npad)
+    bp = pad_lanes(b, npad)
+
+    def slice_at(lanes, p, rev):
+        out = jax.tree.map(lambda x: lax.dynamic_slice(x, (p,), (w,)), lanes)
+        return jax.tree.map(lambda x: x[::-1], out) if rev else out
+
+    def body(carry, _):
+        pA, pB = carry
+        chunk, take_a = flims_cycle(slice_at(ap, pA, False),
+                                    slice_at(bp, pB, True), compare)
+        k = jnp.sum(take_a.astype(jnp.int32))
+        return (pA + k, pB + (w - k)), chunk
+
+    (_, _), chunks = lax.scan(body, (jnp.int32(0), jnp.int32(0)), None,
+                              length=cycles)
+    return jax.tree.map(
+        lambda x: x.reshape((-1,) + x.shape[2:])[:n_out], chunks)

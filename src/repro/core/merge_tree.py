@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flims import flims_merge_ref, _pad_to, sentinel_for
+from repro.core.lanes import KEY, RANK, VAL, merge_lanes, stable_compare
 
 
 @partial(jax.jit, static_argnames=("w",))
@@ -33,6 +34,55 @@ def pmt_merge(lists: jnp.ndarray, w: int = 32) -> jnp.ndarray:
     while rows.shape[0] > 1:
         rows = merge(rows[0::2], rows[1::2])
     return rows[0]
+
+
+def _pmt_reduce_lanes(lanes, w: int):
+    """Binary tree of vmapped stable lane merges over the leading row axis."""
+    merge = jax.vmap(
+        lambda a, b: merge_lanes(a, b, w=w, compare=stable_compare))
+    while lanes[KEY].shape[0] > 1:
+        lanes = merge(jax.tree.map(lambda v: v[0::2], lanes),
+                      jax.tree.map(lambda v: v[1::2], lanes))
+    return jax.tree.map(lambda v: v[0], lanes)
+
+
+@partial(jax.jit, static_argnames=("w",))
+def pmt_merge_kv(keys: jnp.ndarray, payload, w: int = 32):
+    """Stable KV PMT (fig. 1 with payload lanes): merge K descending (K, n)
+    key rows carrying a payload pytree of (K, n)-leaf rows.
+
+    Each tree level is a vmapped stable FLiMS lane merge (paper algorithm 3)
+    with row-major ranks: ties order lower-row-first, then by position.
+    Returns ``(merged_keys, merged_payload)`` of length K*n.
+    """
+    K, n = keys.shape
+    assert K & (K - 1) == 0, "K must be a power of two"
+    rank = (jnp.arange(K, dtype=jnp.int32)[:, None] * n
+            + jnp.arange(n, dtype=jnp.int32)[None, :])
+    out = _pmt_reduce_lanes({KEY: keys, RANK: rank, VAL: payload}, w)
+    return out[KEY], out[VAL]
+
+
+@partial(jax.jit, static_argnames=("w",))
+def pmt_merge_kv_padded(keys: jnp.ndarray, counts: jnp.ndarray, payload,
+                        w: int = 32):
+    """KV PMT over padded rows with per-row validity (the sample-sort
+    exchange shape). Enforced like ``pmt_merge_padded``, with one extra
+    guarantee the payload lanes need: invalid tail positions get the
+    sentinel key AND a rank after every real element, so even when *real*
+    keys equal the sentinel (iinfo.min ints, -inf floats) padding sorts
+    strictly behind them and the merged payload prefix of length
+    ``sum(counts)`` is exact. Returns ``(merged_keys, merged_payload)``.
+    """
+    K, n = keys.shape
+    assert K & (K - 1) == 0, "K must be a power of two"
+    pos = jnp.arange(n, dtype=jnp.int32)
+    valid = pos[None, :] < counts[:, None]
+    base = jnp.arange(K, dtype=jnp.int32)[:, None] * n + pos[None, :]
+    rank = jnp.where(valid, base, K * n + base)
+    masked = jnp.where(valid, keys, sentinel_for(keys.dtype))
+    out = _pmt_reduce_lanes({KEY: masked, RANK: rank, VAL: payload}, w)
+    return out[KEY], out[VAL]
 
 
 def merge_k(arrays: Sequence[jnp.ndarray], w: int = 32,

@@ -4,6 +4,11 @@ Pipeline: bitonic sort-in-chunks (vectorised over rows) followed by
 log2(n/chunk) FLiMS merge passes (vmapped over the independent pairs of each
 pass) — exactly the paper's CPU scheme (sorted chunk size 512, then 2-way
 FLiMS merges), expressed in JAX.
+
+``flims_argsort`` is the same pipeline over key+rank lanes (`core/lanes.py`):
+ranks are the original input positions, every comparator is the canonical
+``stable_compare`` (key desc, rank asc), and the rank lane of the fully
+merged result *is* the stable permutation.
 """
 from __future__ import annotations
 
@@ -13,9 +18,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.butterfly import bitonic_sort
-from repro.core.flims import (flims_merge_ref, flims_merge_kv_stable,
-                              sentinel_for, _pad_to,
+from repro.core.flims import (flims_merge_ref, _pad_to,
                               next_pow2 as _next_pow2)
+from repro.core.lanes import (INVALID_RANK, KEY, RANK, merge_lanes,
+                              stable_compare)
 
 
 @partial(jax.jit, static_argnames=("chunk",))
@@ -47,7 +53,7 @@ def flims_sort(x: jnp.ndarray, *, chunk: int = 512, w: int = 32,
 @partial(jax.jit, static_argnames=("chunk", "w", "descending"))
 def flims_argsort(keys: jnp.ndarray, *, chunk: int = 256, w: int = 32,
                   descending: bool = True) -> jnp.ndarray:
-    """Stable argsort via key/value FLiMS merge sort (paper alg. 3 semantics).
+    """Stable argsort via key/rank FLiMS merge sort (paper alg. 3 semantics).
 
     Returns int32 permutation such that keys[perm] is sorted.
     """
@@ -68,22 +74,20 @@ def _argsort_desc(keys: jnp.ndarray, chunk: int, w: int) -> jnp.ndarray:
     n_pad = _next_pow2(max(n, chunk))
     kp = _pad_to(keys, n_pad)
     idx = jnp.where(jnp.arange(n_pad) < n, jnp.arange(n_pad, dtype=jnp.int32),
-                    jnp.int32(n_pad))
-    # chunk-local stable sort: compound compare (key desc, rank asc)
-    rows = {"key": kp.reshape(-1, chunk), "rank": idx.reshape(-1, chunk)}
+                    INVALID_RANK)
+    # chunk-local stable sort over (key, rank) lanes
+    rows = {KEY: kp.reshape(-1, chunk), RANK: idx.reshape(-1, chunk)}
+    rows = bitonic_sort(rows, compare=stable_compare)
 
-    def cmp(x, y):
-        return (x["key"] > y["key"]) | ((x["key"] == y["key"]) &
-                                        (x["rank"] < y["rank"]))
-
-    rows = bitonic_sort(rows, compare=cmp)
-    k2, i2 = rows["key"], rows["rank"]
-
-    def merge_pair(ka, va, kb, vb):
-        mk, mv = flims_merge_kv_stable(ka, {"i": va}, kb, {"i": vb}, w)
-        return mk, mv["i"]
+    def merge_pair(ka, ra, kb, rb):
+        # adjacent chunks: every A-rank < every B-rank, so stable_compare's
+        # rank tiebreak reproduces algorithm 3's (src, order) priority.
+        out = merge_lanes({KEY: ka, RANK: ra}, {KEY: kb, RANK: rb}, w=w,
+                          compare=stable_compare)
+        return out[KEY], out[RANK]
 
     merge = jax.vmap(merge_pair)
+    k2, i2 = rows[KEY], rows[RANK]
     while k2.shape[0] > 1:
         k2, i2 = merge(k2[0::2], i2[0::2], k2[1::2], i2[1::2])
     return i2[0, :n]

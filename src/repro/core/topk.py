@@ -6,7 +6,10 @@ arbitrary array is therefore: bitonic-sort rows of width c=k, then a binary
 tree reduction where every node is a *single* selector+butterfly — i.e. a
 parallel merge tree (paper §2.1) specialised to fixed-k streams.
 
-Used by the serving sampler (top-k / top-p) and MoE router.
+Every network runs over key+rank lanes (`core/lanes.py`): the rank lane both
+breaks ties by input position (lax.top_k order) and *is* the returned index;
+an optional ``values`` payload pytree rides extra lanes through the same
+comparators (KV top-k — used by the serving sampler and MoE router).
 """
 from __future__ import annotations
 
@@ -15,8 +18,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.butterfly import bitonic_sort, butterfly_sort
-from repro.core.flims import sentinel_for
+from repro.core.butterfly import bitonic_sort
+from repro.core.lanes import (KEY, RANK, VAL, sentinel_for, stable_compare,
+                              topk_node)
 
 
 def _next_pow2(n: int) -> int:
@@ -26,26 +30,17 @@ def _next_pow2(n: int) -> int:
     return p
 
 
-def _topk_node(a, b):
-    """Top-k (sorted desc) of two descending k-lists: one FLiMS cycle."""
-    br = jax.tree.map(lambda x: x[..., ::-1], b)
-    if isinstance(a, dict):
-        take_a = (a["key"] > br["key"]) | ((a["key"] == br["key"]) &
-                                           (a["rank"] < br["rank"]))
-        sel = jax.tree.map(lambda x, y: jnp.where(take_a, x, y), a, br)
-        cmp = lambda x, y: (x["key"] > y["key"]) | (
-            (x["key"] == y["key"]) & (x["rank"] < y["rank"]))
-        return butterfly_sort(sel, compare=cmp)
-    sel = jnp.maximum(a, br)
-    return butterfly_sort(sel)
-
-
 @partial(jax.jit, static_argnames=("k",))
-def flims_topk(x: jnp.ndarray, k: int):
-    """Return (values, indices) of the k largest elements, values descending.
+def flims_topk(x: jnp.ndarray, k: int, values=None):
+    """Top-k of the trailing axis: ``(vals, inds)`` — or, with a ``values``
+    payload pytree of ``x``-shaped leaves, ``(vals, inds, payload_topk)``.
 
-    Deterministic: ties broken by lower index first (matches lax.top_k).
+    Values descending; ties broken by lower index first (matches lax.top_k).
     Works on any 1-D or batched (..., n) array over the trailing axis.
+    When fewer than ``k`` elements exist (``k > n`` after the power-of-two
+    padding) the tail is masked by rank validity: indices are clamped to 0
+    and the values/payload report the dtype sentinel / zeros, so no returned
+    index ever points at padding.
     """
     kk = _next_pow2(k)
     n = x.shape[-1]
@@ -55,14 +50,16 @@ def flims_topk(x: jnp.ndarray, k: int):
     xp = jnp.pad(x, pad, constant_values=sent)
     idx = jnp.arange(n_pad, dtype=jnp.int32)
     idx = jnp.broadcast_to(idx, xp.shape)
-    rows = {"key": xp.reshape(x.shape[:-1] + (n_pad // kk, kk)),
-            "rank": idx.reshape(x.shape[:-1] + (n_pad // kk, kk))}
-    cmp = lambda a, b: (a["key"] > b["key"]) | ((a["key"] == b["key"]) &
-                                                (a["rank"] < b["rank"]))
-    rows = bitonic_sort(rows, compare=cmp)
+    rows = {KEY: xp.reshape(x.shape[:-1] + (n_pad // kk, kk)),
+            RANK: idx.reshape(x.shape[:-1] + (n_pad // kk, kk))}
+    if values is not None:
+        rows[VAL] = jax.tree.map(
+            lambda v: jnp.pad(v, pad).reshape(x.shape[:-1] + (n_pad // kk, kk)),
+            values)
+    rows = bitonic_sort(rows, compare=stable_compare)
     # tree-reduce rows pairwise along axis -2
-    while rows["key"].shape[-2] > 1:
-        m = rows["key"].shape[-2]
+    while rows[KEY].shape[-2] > 1:
+        m = rows[KEY].shape[-2]
         if m % 2 == 1:  # carry odd row through
             carry = jax.tree.map(lambda r: r[..., -1:, :], rows)
             rows = jax.tree.map(lambda r: r[..., :-1, :], rows)
@@ -70,10 +67,20 @@ def flims_topk(x: jnp.ndarray, k: int):
             carry = None
         a = jax.tree.map(lambda r: r[..., 0::2, :], rows)
         b = jax.tree.map(lambda r: r[..., 1::2, :], rows)
-        rows = _topk_node(a, b)
+        rows = topk_node(a, b, stable_compare)
         if carry is not None:
             rows = jax.tree.map(lambda r, c: jnp.concatenate([r, c], axis=-2),
                                 rows, carry)
-    vals = rows["key"][..., 0, :k]
-    inds = rows["rank"][..., 0, :k]
-    return vals, inds
+    vals = rows[KEY][..., 0, :k]
+    inds = rows[RANK][..., 0, :k]
+    # rank validity: padding carries ranks >= n, so it can only surface when
+    # k exceeds the real element count — mask it out of the results.
+    valid = inds < n
+    vals = jnp.where(valid, vals, sent)
+    inds = jnp.where(valid, inds, 0)
+    if values is None:
+        return vals, inds
+    pay = jax.tree.map(
+        lambda r: jnp.where(valid, r[..., 0, :k], jnp.zeros((), r.dtype)),
+        rows[VAL])
+    return vals, inds, pay

@@ -2,18 +2,25 @@
 
 One facade over the whole FLiMS stack: full sorts, stable argsorts, 2-way
 merges, top-k, and — the ragged-batch capability — ``segment_sort`` /
-``segment_merge`` over flat arrays described by segment offsets (the
-MoE-dispatch / ragged-sampler shape). Each call resolves a ``Plan``
-(variant + tile parameters) through the planner's cache → table → heuristic
-chain; ``autotune`` measures the registered variants on an example workload
-and installs the winner. See DESIGN.md §3.
+``segment_merge`` / ``segment_argsort`` over flat arrays described by segment
+offsets (the MoE-dispatch / ragged-sampler shape). Each call resolves a
+``Plan`` (variant + tile parameters) through the planner's cache → table →
+heuristic chain; ``autotune`` measures the registered variants on an example
+workload and installs the winner. See DESIGN.md §3-§4.
+
+Payload lanes are first-class: ``sort`` / ``merge`` / ``segment_sort`` take
+``values=`` (a pytree of payload arrays carried with the keys) and
+``stable=`` (paper algorithm 3 tie semantics), ``topk`` takes ``values=``,
+and ``argsort`` / ``segment_argsort`` return the stable permutation itself.
 
     from repro import engine
     y     = engine.sort(x)                       # descending
+    k, v  = engine.sort(x, values=v)             # stable key/value sort
     perm  = engine.argsort(keys, descending=False)
     m     = engine.merge(a, b)
     v, i  = engine.topk(logits, 16)
     s     = engine.segment_sort(values, offsets) # ragged batch, one kernel
+    perm  = engine.segment_argsort(keys, offsets)  # local stable perms
     plan  = engine.autotune("segment_sort", values, offsets)
     engine.save_plans("plans.json")
 """
@@ -30,7 +37,8 @@ from repro.engine.planner import (Plan, default_planner, plan_key,
 
 __all__ = [
     "sort", "argsort", "merge", "topk", "segment_sort", "segment_merge",
-    "autotune", "save_plans", "load_plans", "clear_plans", "Plan",
+    "segment_argsort", "autotune", "save_plans", "load_plans", "clear_plans",
+    "Plan",
 ]
 
 
@@ -46,7 +54,7 @@ def infer_key(op: str, *args):
     if op in ("sort", "argsort", "topk"):
         x = args[0]
         return plan_key(op, n=x.shape[-1], dtype=x.dtype)
-    if op == "segment_sort":
+    if op in ("segment_sort", "segment_argsort"):
         values, offsets = args[:2]
         return plan_key(op, n=values.shape[0], dtype=values.dtype,
                         segments=offsets.shape[0] - 1)
@@ -70,12 +78,13 @@ def _resolve(op: str, plan: Optional[Plan], variant: Optional[str], *args,
 
 def run_op(op: str, plan: Plan, *args):
     """Execute ``op`` under an explicit plan (the autotuner's entry point)."""
-    if op in ("segment_sort", "segment_merge") and plan.cap == 0:
-        total = (args[0].shape[0] if op == "segment_sort"
-                 else args[0].shape[0] + args[2].shape[0])
+    if op in ("segment_sort", "segment_merge", "segment_argsort") \
+            and plan.cap == 0:
+        total = (args[0].shape[0] + args[2].shape[0]
+                 if op == "segment_merge" else args[0].shape[0])
         plan = plan.replace(cap=segments.static_cap(args[1], total))
     kw = {"plan": plan, "interpret": _interpret()}
-    if op == "argsort":
+    if op in ("argsort", "segment_argsort"):
         kw["descending"] = True
     return registry.get(op, plan.variant)(*args, **kw)
 
@@ -84,9 +93,23 @@ def run_op(op: str, plan: Plan, *args):
 # public ops
 # --------------------------------------------------------------------------
 
-def sort(x, *, descending: bool = True, plan: Optional[Plan] = None,
-         variant: Optional[str] = None):
-    """Full sort of a 1-D array."""
+def sort(x, *, descending: bool = True, values=None, stable: bool = False,
+         plan: Optional[Plan] = None, variant: Optional[str] = None):
+    """Full sort of a 1-D array.
+
+    ``values=`` carries a payload pytree of ``x``-shaped leaves through the
+    sort and returns ``(sorted_keys, sorted_values)``; ``stable=True``
+    requests paper-algorithm-3 tie semantics (ties keep input order — only
+    observable through payloads or the permutation). Either flag routes
+    through the stable ``argsort`` op, so ``plan=``/``variant=`` then name
+    an *argsort* variant.
+    """
+    if values is not None or stable:
+        perm = argsort(x, descending=descending, plan=plan, variant=variant)
+        keys = x[perm]
+        if values is None:
+            return keys
+        return keys, jax.tree.map(lambda v: v[perm], values)
     plan = _resolve("sort", plan, variant, x)
     out = registry.get("sort", plan.variant)(x, plan=plan,
                                              interpret=_interpret())
@@ -97,17 +120,27 @@ def argsort(keys, *, descending: bool = True, plan: Optional[Plan] = None,
             variant: Optional[str] = None):
     """Stable argsort of 1-D keys, or row-wise over a 2-D batch.
 
-    Ties keep their original order (paper algorithm 3 semantics) in both the
-    FLiMS and XLA variants — callers may rely on it for MoE dispatch.
+    Ties keep their original order (paper algorithm 3 semantics) in every
+    variant — the pure-JAX FLiMS lanes ('flims'), the KV Pallas kernels
+    ('pallas'), and XLA — callers may rely on it for MoE dispatch.
     """
     plan = _resolve("argsort", plan, variant, keys)
     return registry.get("argsort", plan.variant)(
         keys, plan=plan, descending=descending, interpret=_interpret())
 
 
-def merge(a, b, *, descending: bool = True, plan: Optional[Plan] = None,
+def merge(a, b, *, descending: bool = True, values=None,
+          stable: bool = False, plan: Optional[Plan] = None,
           variant: Optional[str] = None):
-    """Merge two sorted 1-D arrays into one sorted array."""
+    """Merge two sorted 1-D arrays into one sorted array.
+
+    ``values=(vals_a, vals_b)`` carries payload pytrees through the merge
+    and returns ``(merged_keys, merged_values)``; with ``stable=True`` (or
+    any payload) ties order A-first then by input position (algorithm 3) —
+    via rank lanes in the Pallas kernel, natively in the lane formulations.
+    """
+    if values is not None or stable:
+        return _merge_kv(a, b, values, descending, plan, variant)
     if not descending:
         return merge(a[::-1], b[::-1], plan=plan, variant=variant)[::-1]
     plan = _resolve("merge", plan, variant, a, b)
@@ -115,39 +148,121 @@ def merge(a, b, *, descending: bool = True, plan: Optional[Plan] = None,
                                                interpret=_interpret())
 
 
-def topk(x, k: int, *, plan: Optional[Plan] = None,
+def _merge_kv(a, b, values, descending, plan, variant):
+    rev = lambda t: jax.tree.map(lambda x: x[::-1], t)
+    if not descending:
+        # mirror with the OPERANDS SWAPPED: the descending merge puts its
+        # first operand's ties first, so reversing (B', A') restores the
+        # A-first tie order the stable contract promises.
+        out = _merge_kv(b[::-1], a[::-1],
+                        (rev(values[1]), rev(values[0]))
+                        if values is not None else None,
+                        True, plan, variant)
+        if values is None:
+            return out[::-1]
+        return out[0][::-1], rev(out[1])
+    plan = _resolve("merge", plan, variant, a, b)
+    va, vb = values if values is not None else ({}, {})
+    if plan.variant == "pallas":
+        from repro.kernels.flims_merge import flims_merge_kv_pallas
+        nA = a.shape[0]
+        ra = jnp.arange(nA, dtype=jnp.int32)
+        rb = nA + jnp.arange(b.shape[0], dtype=jnp.int32)
+        keys, ranks = flims_merge_kv_pallas(
+            a, ra, b, rb, w=plan.w, block_out=plan.block_out,
+            interpret=_interpret())
+        if values is None:
+            return keys
+        vals = jax.tree.map(lambda x, y: jnp.concatenate([x, y])[ranks],
+                            va, vb)
+        return keys, vals
+    # scan formulations carry the payload natively through the lane network
+    from repro.core.flims import flims_merge_kv_stable
+    keys, vals = flims_merge_kv_stable(a, va, b, vb, w=plan.w)
+    if values is None:
+        return keys
+    return keys, vals
+
+
+def topk(x, k: int, *, values=None, plan: Optional[Plan] = None,
          variant: Optional[str] = None):
     """(values, indices) of the k largest along the trailing axis,
-    values descending, ties broken by lower index (lax.top_k order)."""
+    values descending, ties broken by lower index (lax.top_k order).
+
+    With ``values=`` (a payload pytree of ``x``-shaped leaves) returns
+    ``(vals, indices, payload_topk)``: the payload rides extra lanes through
+    the FLiMS selector tree (or is gathered by the XLA variant).
+    """
     plan = _resolve("topk", plan, variant, x)
-    return registry.get("topk", plan.variant)(x, k, plan=plan,
+    return registry.get("topk", plan.variant)(x, k, plan=plan, values=values,
                                               interpret=_interpret())
 
 
-def segment_sort(values, offsets, *, descending: bool = True,
-                 cap: int = 0, plan: Optional[Plan] = None,
+def segment_sort(keys, offsets, *, descending: bool = True, values=None,
+                 stable: bool = False, cap: int = 0,
+                 plan: Optional[Plan] = None,
                  variant: Optional[str] = None):
     """Sort every segment of a ragged batch independently.
 
-    ``values`` is the flat (N,) concatenation of S segments with boundaries
+    ``keys`` is the flat (N,) concatenation of S segments with boundaries
     ``offsets`` ((S+1,), ``offsets[0]==0``, ``offsets[-1]==N``; empty
     segments allowed). ``cap`` bounds the longest segment (power of two); it
     is derived from ``offsets`` when concrete, else defaults to
     ``next_pow2(N)`` — pass it explicitly under ``jit`` to keep blocks tight.
+
+    ``values=`` carries a payload pytree of (N,)-leaves and returns
+    ``(sorted_keys, sorted_values)``; with ``stable=True`` (or any payload)
+    ties keep input order. Both route through ``segment_argsort`` — the
+    permutation comes from the rank-lane kernels and the payload is applied
+    inside the engine, so consumers need no external gather round trip.
     """
-    segments.validate_offsets(offsets, values.shape[0])
+    if values is not None or stable:
+        offsets = jnp.asarray(offsets, jnp.int32)
+        perm = segment_argsort(keys, offsets, descending=descending, cap=cap,
+                               plan=plan, variant=variant)
+        src = offsets[segments.segment_ids(offsets, keys.shape[0])] + perm
+        out = keys[src]
+        if values is None:
+            return out
+        return out, jax.tree.map(lambda v: v[src], values)
+    segments.validate_offsets(offsets, keys.shape[0])
     offsets = jnp.asarray(offsets, jnp.int32)
-    plan = _resolve("segment_sort", plan, variant, values, offsets)
+    plan = _resolve("segment_sort", plan, variant, keys, offsets)
     if cap or not plan.cap:
         cap = (segments._next_pow2(cap) if cap
-               else segments.static_cap(offsets, values.shape[0]))
+               else segments.static_cap(offsets, keys.shape[0]))
         plan = plan.replace(cap=cap)
     segments.validate_cap(offsets, plan.cap)
     out = registry.get("segment_sort", plan.variant)(
-        values, offsets, plan=plan, interpret=_interpret())
+        keys, offsets, plan=plan, interpret=_interpret())
     if not descending:
-        out = segments.reverse_segments(out, offsets, values.shape[0])
+        out = segments.reverse_segments(out, offsets, keys.shape[0])
     return out
+
+
+def segment_argsort(keys, offsets, *, descending: bool = True, cap: int = 0,
+                    plan: Optional[Plan] = None,
+                    variant: Optional[str] = None):
+    """Stable argsort of every segment of a ragged batch.
+
+    Returns a flat int32 array of *segment-local* source positions: for
+    segment ``s``, ``keys[offsets[s] + perm[offsets[s]:offsets[s+1]]]`` is
+    that segment's sort, and equal keys keep their input order (paper
+    algorithm 3) in every variant and either direction. This is the
+    MoE-dispatch primitive: the whole ragged batch is one kernel launch, no
+    flatten→argsort→gather round trip per segment.
+    """
+    segments.validate_offsets(offsets, keys.shape[0])
+    offsets = jnp.asarray(offsets, jnp.int32)
+    plan = _resolve("segment_argsort", plan, variant, keys, offsets)
+    if cap or not plan.cap:
+        cap = (segments._next_pow2(cap) if cap
+               else segments.static_cap(offsets, keys.shape[0]))
+        plan = plan.replace(cap=cap)
+    segments.validate_cap(offsets, plan.cap)
+    return registry.get("segment_argsort", plan.variant)(
+        keys, offsets, plan=plan, descending=descending,
+        interpret=_interpret())
 
 
 def segment_merge(a, a_offsets, b, b_offsets, *, descending: bool = True,
@@ -179,7 +294,9 @@ def segment_merge(a, a_offsets, b, b_offsets, *, descending: bool = True,
 
 def autotune(op: str, *example_args, repeats: int = 3, candidates=None):
     """Measure every registered variant of ``op`` on the example workload and
-    cache the fastest plan for that shape bucket. Returns the winning Plan."""
+    cache the fastest plan for that shape bucket. Returns the winning Plan.
+    Candidates that raise (e.g. a Pallas lowering failure at this shape) are
+    recorded as infeasible and skipped, not fatal."""
     return default_planner.autotune(op, *example_args, repeats=repeats,
                                     candidates=candidates)
 

@@ -85,15 +85,16 @@ def heuristic_plan(op: str, key: Key) -> Plan:
     w = max(8, min(128, _next_pow2(max(n, 1) // 64)))
     block_out = max(w, min(4096, _next_pow2(max(n, 1)) // 8 or w))
     if backend == "tpu":
-        table = {"sort": "pallas", "merge": "pallas", "argsort": "flims",
+        table = {"sort": "pallas", "merge": "pallas", "argsort": "pallas",
                  "topk": "flims", "segment_merge": "pallas",
-                 "segment_sort": "pallas_two_phase"}
+                 "segment_sort": "pallas_two_phase",
+                 "segment_argsort": "pallas_two_phase"}
     else:
         # CPU/GPU interpret-mode kernels are for correctness, not speed:
         # serve the hot path from XLA, keep merge on the banked dataflow.
         table = {"sort": "xla", "merge": "banked", "argsort": "xla",
                  "topk": "xla", "segment_merge": "xla",
-                 "segment_sort": "xla"}
+                 "segment_sort": "xla", "segment_argsort": "xla"}
     return Plan(variant=table[op], w=w, block_out=block_out, chunk=256)
 
 
@@ -104,6 +105,7 @@ def heuristic_plan(op: str, key: Key) -> Plan:
 class Planner:
     def __init__(self):
         self._plans: Dict[Key, Plan] = {}
+        self._infeasible: Dict[Key, set] = {}
 
     # -- cache ------------------------------------------------------------
     def lookup(self, key: Key) -> Optional[Plan]:
@@ -114,6 +116,11 @@ class Planner:
 
     def clear(self) -> None:
         self._plans.clear()
+        self._infeasible.clear()
+
+    def infeasible_for(self, key: Key) -> frozenset:
+        """Candidate plans recorded as unable to serve this shape bucket."""
+        return frozenset(self._infeasible.get(key, ()))
 
     def plan_for(self, op: str, *, n: int, dtype, segments: int = 0,
                  backend: Optional[str] = None) -> Plan:
@@ -162,12 +169,19 @@ class Planner:
             key = api.infer_key(op, *example_args)
         if candidates is None:
             candidates = candidate_plans(op, key)
+        bad = self._infeasible.setdefault(key, set())
         best, best_t = None, float("inf")
         for plan in candidates:
+            if plan in bad:              # known-infeasible: skip, don't retry
+                continue
             try:
                 t = _time(lambda: run(plan, *example_args), repeats=repeats)
             except Exception:
-                continue                 # variant can't serve this workload
+                # a raising candidate (e.g. a Pallas lowering failure at this
+                # shape) is recorded as infeasible; the tune carries on with
+                # the remaining candidates instead of aborting.
+                bad.add(plan)
+                continue
             if t < best_t:
                 best, best_t = plan, t
         if best is None:
@@ -186,7 +200,7 @@ def candidate_plans(op: str, key: Key):
                 for block_out in (1024, 4096):
                     out.append(Plan(variant, w=min(w, max(8, n)),
                                     block_out=block_out))
-        elif op in ("sort", "segment_sort"):
+        elif op in ("sort", "argsort", "segment_sort", "segment_argsort"):
             for chunk in (256, 512):
                 out.append(Plan(variant, w=32, chunk=chunk))
         else:

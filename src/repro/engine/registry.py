@@ -1,7 +1,7 @@
 """Variant registry: which implementations can serve each engine op.
 
 Every op (``sort``, ``argsort``, ``merge``, ``topk``, ``segment_sort``,
-``segment_merge``) has a family of registered variants — the readable
+``segment_merge``, ``segment_argsort``) has a family of registered variants — the readable
 reference formulations, the banked/windowed FLiMS dataflow, the Pallas
 kernels, and plain XLA — all behind one calling convention:
 
@@ -103,6 +103,16 @@ def _argsort_flims(keys, *, plan, descending, interpret):
     return fn(keys)
 
 
+@register("argsort", "pallas")
+def _argsort_pallas(keys, *, plan, descending, interpret):
+    from repro.kernels.ops import kernel_argsort
+    fn = lambda k: kernel_argsort(k, chunk=plan.chunk, w=plan.w,
+                                  descending=descending, interpret=interpret)
+    if keys.ndim == 2:
+        return jax.vmap(fn)(keys)
+    return fn(keys)
+
+
 @register("argsort", "xla")
 def _argsort_xla(keys, *, plan, descending, interpret):
     return jnp.argsort(keys, axis=-1, stable=True,
@@ -114,14 +124,18 @@ def _argsort_xla(keys, *, plan, descending, interpret):
 # --------------------------------------------------------------------------
 
 @register("topk", "flims")
-def _topk_flims(x, k, *, plan, interpret):
+def _topk_flims(x, k, *, plan, interpret, values=None):
     from repro.core.topk import flims_topk
-    return flims_topk(x, k)
+    return flims_topk(x, k, values=values)
 
 
 @register("topk", "xla")
-def _topk_xla(x, k, *, plan, interpret):
-    return lax.top_k(x, k)
+def _topk_xla(x, k, *, plan, interpret, values=None):
+    vals, idx = lax.top_k(x, k)
+    if values is None:
+        return vals, idx
+    pay = jax.tree.map(lambda v: jnp.take_along_axis(v, idx, axis=-1), values)
+    return vals, idx, pay
 
 
 # --------------------------------------------------------------------------
@@ -165,3 +179,30 @@ def _segment_sort_two_phase(values, offsets, *, plan, interpret):
 def _segment_sort_xla(values, offsets, *, plan, interpret):
     from repro.engine.segments import segment_sort_ref
     return segment_sort_ref(values, offsets, cap=plan.cap)
+
+
+# --------------------------------------------------------------------------
+# segment_argsort: ragged batch of stable local argsorts (rank-lane kernels)
+# --------------------------------------------------------------------------
+
+@register("segment_argsort", "pallas_fused")
+def _segment_argsort_fused(keys, offsets, *, plan, descending, interpret):
+    from repro.kernels.segmented_merge import segment_argsort_pallas
+    return segment_argsort_pallas(keys, offsets, cap=plan.cap,
+                                  descending=descending, interpret=interpret)
+
+
+@register("segment_argsort", "pallas_two_phase")
+def _segment_argsort_two_phase(keys, offsets, *, plan, descending, interpret):
+    from repro.kernels.segmented_merge import segment_argsort_two_phase
+    return segment_argsort_two_phase(keys, offsets, cap=plan.cap,
+                                     chunk=min(plan.chunk, plan.cap),
+                                     w=plan.w, descending=descending,
+                                     interpret=interpret)
+
+
+@register("segment_argsort", "xla")
+def _segment_argsort_xla(keys, offsets, *, plan, descending, interpret):
+    from repro.engine.segments import segment_argsort_ref
+    return segment_argsort_ref(keys, offsets, cap=plan.cap,
+                               descending=descending)

@@ -77,18 +77,17 @@ def segment_ids(offsets, total: int):
                                      side="right") - 1, 0, max(S - 1, 0))
 
 
-def pad_segments(values, offsets, cap: int):
-    """Gather the ragged batch into a dense sentinel-padded (S, cap) bank."""
+def pad_segments(values, offsets, cap: int, fill=None):
+    """Gather the ragged batch into a dense padded (S, cap) bank (``fill``
+    defaults to the dtype sentinel, which sorts last descending)."""
     from repro.kernels.segmented_merge import padded_bank
-    return padded_bank(values, offsets, cap)
+    return padded_bank(values, offsets, cap, fill=fill)
 
 
 def unpad_segments(bank, offsets, total: int):
     """Inverse of ``pad_segments``: gather the valid prefixes back flat."""
-    offsets = offsets.astype(jnp.int32)
-    s = segment_ids(offsets, total)
-    i = jnp.arange(total, dtype=jnp.int32)
-    return bank[s, i - offsets[s]]
+    from repro.kernels.segmented_merge import unpad_bank
+    return unpad_bank(bank, offsets, total)
 
 
 def reverse_segments(values, offsets, total: int):
@@ -98,6 +97,35 @@ def reverse_segments(values, offsets, total: int):
     i = jnp.arange(total, dtype=jnp.int32)
     lens = jnp.diff(offsets)
     return values[offsets[s] + lens[s] - 1 - (i - offsets[s])]
+
+
+def segment_argsort_ref(keys, offsets, *, cap: int = 0,
+                        descending: bool = True):
+    """Capacity-padded XLA stable per-segment argsort (local positions).
+
+    Uniform concrete segments take the reshape fast path (the MoE-dispatch
+    shape: one batched ``jnp.argsort``, no padding gather); ragged batches go
+    through a direction-padded bank. Padding sorts last in either direction
+    and stability keeps real elements ahead of it on ties, so each segment's
+    valid prefix is exactly its stable local permutation.
+    """
+    N = keys.shape[0]
+    S = offsets.shape[0] - 1
+    if S <= 0 or N == 0:
+        return jnp.zeros((N,), jnp.int32)
+    if is_concrete(offsets):
+        lens = np.diff(np.asarray(offsets))
+        if lens.size and (lens == lens[0]).all() and lens[0] > 0:
+            perm = jnp.argsort(keys.reshape(S, int(lens[0])), axis=-1,
+                               stable=True, descending=descending)
+            return perm.reshape(-1).astype(jnp.int32)
+    from repro.kernels.flims_merge import plus_inf_for
+    cap = cap or _next_pow2(N)
+    fill = sentinel_for(keys.dtype) if descending else plus_inf_for(keys.dtype)
+    bank = pad_segments(keys, offsets, cap, fill=fill)
+    perm = jnp.argsort(bank, axis=-1, stable=True,
+                       descending=descending).astype(jnp.int32)
+    return unpad_segments(perm, offsets, N)
 
 
 def segment_sort_ref(values, offsets, *, cap: int = 0):

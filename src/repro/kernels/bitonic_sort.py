@@ -36,8 +36,48 @@ def _bitonic_rows_desc(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
+def _bitonic_rows_kv(k: jnp.ndarray, r: jnp.ndarray,
+                     descending: bool = True):
+    """Stable row-wise bitonic sort of (key, rank) lane pairs.
+
+    Orders each row by (key desc-or-asc, rank asc); with ranks assigned in
+    input order this is a stable sort. Same static network as
+    ``_bitonic_rows_desc``, with the compound comparator on both lanes.
+    """
+    m, c = k.shape
+    kk = 2
+    while kk <= c:
+        half = kk // 2
+        d = half
+        while d >= 1:
+            ks = k.reshape(m, c // (2 * d), 2, d)
+            rs = r.reshape(m, c // (2 * d), 2, d)
+            kt, kb = ks[:, :, 0, :], ks[:, :, 1, :]
+            rt, rb = rs[:, :, 0, :], rs[:, :, 1, :]
+            first = (jnp.arange(c).reshape(c // (2 * d), 2, d)[:, 0, :])
+            asc = ((first // kk) % 2 == 1)[None]      # odd kk-blocks reverse
+            if descending:
+                top_first = (kt > kb) | ((kt == kb) & (rt < rb))
+            else:
+                top_first = (kt < kb) | ((kt == kb) & (rt < rb))
+            keep = top_first ^ asc
+            k = jnp.stack([jnp.where(keep, kt, kb),
+                           jnp.where(keep, kb, kt)], axis=2).reshape(m, c)
+            r = jnp.stack([jnp.where(keep, rt, rb),
+                           jnp.where(keep, rb, rt)], axis=2).reshape(m, c)
+            d //= 2
+        kk *= 2
+    return k, r
+
+
 def _sort_kernel(x_ref, o_ref):
     o_ref[...] = _bitonic_rows_desc(x_ref[...])
+
+
+def _sort_kv_kernel(k_ref, r_ref, ok_ref, or_ref, *, descending: bool):
+    ok, orr = _bitonic_rows_kv(k_ref[...], r_ref[...], descending=descending)
+    ok_ref[...] = ok
+    or_ref[...] = orr
 
 
 @functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
@@ -59,3 +99,34 @@ def sort_chunks_pallas(x: jnp.ndarray, *, rows_per_block: int = 8,
         interpret=interpret,
         name="bitonic_sort_chunks",
     )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block", "descending",
+                                             "interpret"))
+def sort_chunks_kv_pallas(k: jnp.ndarray, r: jnp.ndarray, *,
+                          rows_per_block: int = 8, descending: bool = True,
+                          interpret: bool = True):
+    """Stable row-wise sort of (key, rank) lane rows in one ``pallas_call``.
+
+    ``k``/``r`` are (m, c) key and int32 rank banks; each row is ordered by
+    the compound (key ``descending``, rank asc) comparator and both lanes are
+    returned permuted identically.
+    """
+    m, c = k.shape
+    assert k.shape == r.shape
+    assert c & (c - 1) == 0, "chunk width must be a power of two"
+    rb = min(rows_per_block, m)
+    while m % rb:
+        rb -= 1
+    grid = (m // rb,)
+    spec = pl.BlockSpec((rb, c), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_sort_kv_kernel, descending=descending),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((m, c), k.dtype),
+                   jax.ShapeDtypeStruct((m, c), r.dtype)],
+        interpret=interpret,
+        name="bitonic_sort_chunks_kv",
+    )(k, r)

@@ -26,6 +26,31 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.flims import sentinel_for
+from repro.core.lanes import INVALID_RANK
+
+
+def plus_inf_for(dtype):
+    """Key that sorts first in descending order (never strictly loses)."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def bound_keys(dtype, descending: bool = True):
+    """(first, last): key values sorting before/after everything real."""
+    lo, hi = sentinel_for(dtype), plus_inf_for(dtype)
+    return (hi, lo) if descending else (lo, hi)
+
+
+def lane_first(descending: bool = True):
+    """The compound (key, rank) comparator the KV kernels share: key
+    descending-or-ascending, rank ascending (`lanes.stable_compare` with a
+    static direction — kernels sort ascending natively instead of mirroring).
+    """
+    if descending:
+        return lambda ka, ra, kb, rb: (ka > kb) | ((ka == kb) & (ra < rb))
+    return lambda ka, ra, kb, rb: (ka < kb) | ((ka == kb) & (ra < rb))
 
 
 def element_block_spec(n_rows: int, w: int, index_map) -> pl.BlockSpec:
@@ -179,3 +204,192 @@ def flims_merge_pallas(a: jnp.ndarray, b: jnp.ndarray, *, w: int = 128,
         name="flims_merge",
     )(arow0, brow0, la0, lb0, ar, br)
     return out.reshape(-1)[:n_out]
+
+
+# --------------------------------------------------------------------------
+# KV (rank-lane) variant: the same dataflow with one extra int32 ref per side
+# --------------------------------------------------------------------------
+#
+# Merge Path co-ranks are payload-oblivious: the split point of every output
+# block depends only on the comparator over (key, rank), never on any payload
+# — so the KV kernel reuses the identical grid, BlockSpecs, and scalar
+# prefetch, and simply carries a rank bank beside each key bank. Stability
+# (paper algorithm 3) falls out of ranks assigned in input order; arbitrary
+# payload pytrees are gathered once by the merged rank permutation at the
+# engine layer.
+
+def _butterfly_kv(v: jnp.ndarray, r: jnp.ndarray, descending: bool = True):
+    """Butterfly CAS over (key, rank) lanes: log2(w) compound-compare stages."""
+    first = lane_first(descending)
+    w = v.shape[-1]
+    d = w // 2
+    while d >= 1:
+        x = v.reshape(w // (2 * d), 2, d)
+        y = r.reshape(w // (2 * d), 2, d)
+        kt, kb = x[:, 0, :], x[:, 1, :]
+        rt, rb = y[:, 0, :], y[:, 1, :]
+        m = first(kt, rt, kb, rb)
+        v = jnp.stack([jnp.where(m, kt, kb), jnp.where(m, kb, kt)],
+                      axis=1).reshape(w)
+        r = jnp.stack([jnp.where(m, rt, rb), jnp.where(m, rb, rt)],
+                      axis=1).reshape(w)
+        d //= 2
+    return v, r
+
+
+def _merge_kv_kernel(arow0_ref, brow0_ref, la0_ref, lb0_ref,  # scalar prefetch
+                     a_ref, ar_ref, b_ref, br_ref, ok_ref, or_ref, *,
+                     w: int, cycles: int, descending: bool = True):
+    g = pl.program_id(0)
+    lA0 = la0_ref[g]
+    lB0 = lb0_ref[g]
+    iota = lax.broadcasted_iota(jnp.int32, (w,), 0)
+    n_rows = a_ref.shape[0]
+    first = lane_first(descending)
+
+    def heads(W0, W1, l):
+        return jnp.where(iota < l, W1, W0)
+
+    def body(t, carry):
+        (WA0, WA1, RA0, RA1, WB0, WB1, RB0, RB1, lA, lB, rA, rB) = carry
+        cA = heads(WA0, WA1, lA)
+        cAr = heads(RA0, RA1, lA)
+        cB = heads(WB0, WB1, lB)[::-1]      # MAX_i pairs a_i with b_{w-1-i}
+        cBr = heads(RB0, RB1, lB)[::-1]
+        take = first(cA, cAr, cB, cBr)      # stable selector (algorithm 3)
+        ck, cr = _butterfly_kv(jnp.where(take, cA, cB),
+                               jnp.where(take, cAr, cBr), descending)
+        ok_ref[0, pl.ds(t * w, w)] = ck
+        or_ref[0, pl.ds(t * w, w)] = cr
+        k = jnp.sum(take.astype(jnp.int32))
+
+        def advance(W0, W1, R0, R1, l, r, kref, rref, consumed):
+            l2 = l + consumed
+            shift = l2 >= w
+            row = jnp.minimum(r, n_rows - 1)
+            W0n = jnp.where(shift, W1, W0)
+            W1n = jnp.where(shift, kref[row, :], W1)
+            R0n = jnp.where(shift, R1, R0)
+            R1n = jnp.where(shift, rref[row, :], R1)
+            return (W0n, W1n, R0n, R1n, jnp.where(shift, l2 - w, l2),
+                    r + shift.astype(jnp.int32))
+
+        WA0, WA1, RA0, RA1, lA, rA = advance(WA0, WA1, RA0, RA1, lA, rA,
+                                             a_ref, ar_ref, k)
+        WB0, WB1, RB0, RB1, lB, rB = advance(WB0, WB1, RB0, RB1, lB, rB,
+                                             b_ref, br_ref, w - k)
+        return (WA0, WA1, RA0, RA1, WB0, WB1, RB0, RB1, lA, lB, rA, rB)
+
+    init = (a_ref[0, :], a_ref[1, :], ar_ref[0, :], ar_ref[1, :],
+            b_ref[0, :], b_ref[1, :], br_ref[0, :], br_ref[1, :],
+            lA0, lB0, jnp.int32(2), jnp.int32(2))
+    lax.fori_loop(0, cycles, body, init)
+
+
+def _corank_kv(o, a, ra, b, rb, descending: bool = True):
+    """Merge-path co-rank under the compound (key, rank) order: #A-elements
+    among the top-``o`` of the merged union (stable split)."""
+    nA, nB = a.shape[0], b.shape[0]
+    first = lane_first(descending)
+    firstA, lastA = bound_keys(a.dtype, descending)
+    firstB, lastB = bound_keys(b.dtype, descending)
+    rank_lo = jnp.int32(jnp.iinfo(jnp.int32).min)
+
+    def get(x, rx, n, i, first_k, last_k):
+        v = x[jnp.clip(i, 0, n - 1)]
+        r = rx[jnp.clip(i, 0, n - 1)]
+        v = jnp.where(i < 0, first_k, v)
+        r = jnp.where(i < 0, rank_lo, r)
+        v = jnp.where(i >= n, last_k, v)
+        r = jnp.where(i >= n, INVALID_RANK, r)
+        return v, r
+
+    lo = jnp.maximum(0, o - nB)
+    hi = jnp.minimum(o, nA)
+
+    def step(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi + 1) // 2
+        ka, rka = get(a, ra, nA, mid - 1, firstA, lastA)
+        kb, rkb = get(b, rb, nB, o - mid, firstB, lastB)
+        ok = first(ka, rka, kb, rkb)
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid - 1)
+
+    import math
+    steps = max(1, math.ceil(math.log2(max(nA + nB, 2))) + 1)
+    lo, hi = lax.fori_loop(0, steps, step, (lo, hi))
+    return lo
+
+
+@functools.partial(jax.jit, static_argnames=("w", "block_out", "descending",
+                                             "interpret"))
+def flims_merge_kv_pallas(a, ra, b, rb, *, w: int = 128,
+                          block_out: int = 4096, descending: bool = True,
+                          interpret: bool = True):
+    """Stable partitioned FLiMS merge of (key, rank) lanes.
+
+    Same grid/BlockSpec geometry as ``flims_merge_pallas`` with one extra
+    int32 bank per side riding the identical co-rank partition. Returns
+    ``(merged_keys, merged_ranks)``; ties order by rank ascending, so with
+    ranks assigned in input order the merge is stable end-to-end.
+    """
+    assert a.ndim == b.ndim == 1 and a.dtype == b.dtype
+    assert ra.shape == a.shape and rb.shape == b.shape
+    assert w & (w - 1) == 0
+    n_out = a.shape[0] + b.shape[0]
+    if n_out == 0:
+        return jnp.zeros((0,), a.dtype), jnp.zeros((0,), jnp.int32)
+    if a.shape[0] == 0:
+        return b, rb
+    if b.shape[0] == 0:
+        return a, ra
+    ra = ra.astype(jnp.int32)
+    rb = rb.astype(jnp.int32)
+    C = max(w, min(block_out, 1 << (n_out - 1).bit_length()))
+    C = (C // w) * w
+    G = -(-n_out // C)
+    Ha = C // w + 2                      # rows of each input a block may touch
+    _, last = bound_keys(a.dtype, descending)
+
+    def rows_of(x, fill):
+        r = -(-x.shape[0] // w) + Ha + 2
+        xp = jnp.pad(x, (0, r * w - x.shape[0]), constant_values=fill)
+        return xp.reshape(r, w)
+
+    ak, rak = rows_of(a, last), rows_of(ra, INVALID_RANK)
+    bk, rbk = rows_of(b, last), rows_of(rb, INVALID_RANK)
+    # --- host-side compound-order co-ranks (vectorised binary search) ------
+    os_ = jnp.arange(G, dtype=jnp.int32) * C
+    acut = jax.vmap(lambda o: _corank_kv(o, a, ra, b, rb, descending))(os_)
+    acut = acut.astype(jnp.int32)
+    bcut = os_ - acut
+    arow0, la0 = acut // w, acut % w
+    brow0, lb0 = bcut // w, bcut % w
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(G,),
+        in_specs=[
+            element_block_spec(Ha, w,
+                               lambda g, ar0, br0, la, lb: (ar0[g], 0)),
+            element_block_spec(Ha, w,
+                               lambda g, ar0, br0, la, lb: (ar0[g], 0)),
+            element_block_spec(Ha, w,
+                               lambda g, ar0, br0, la, lb: (br0[g], 0)),
+            element_block_spec(Ha, w,
+                               lambda g, ar0, br0, la, lb: (br0[g], 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, C), lambda g, *_: (g, 0)),
+                   pl.BlockSpec((1, C), lambda g, *_: (g, 0))],
+    )
+    kern = functools.partial(_merge_kv_kernel, w=w, cycles=C // w,
+                             descending=descending)
+    ok, orr = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((G, C), a.dtype),
+                   jax.ShapeDtypeStruct((G, C), jnp.int32)],
+        interpret=interpret,
+        name="flims_merge_kv",
+    )(arow0, brow0, la0, lb0, ak, rak, bk, rbk)
+    return ok.reshape(-1)[:n_out], orr.reshape(-1)[:n_out]

@@ -12,8 +12,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flims import sentinel_for
-from repro.kernels.bitonic_sort import sort_chunks_pallas
-from repro.kernels.flims_merge import flims_merge_pallas
+from repro.core.lanes import INVALID_RANK
+from repro.kernels.bitonic_sort import sort_chunks_kv_pallas, sort_chunks_pallas
+from repro.kernels.flims_merge import bound_keys, flims_merge_kv_pallas, \
+    flims_merge_pallas
 
 
 def _on_tpu() -> bool:
@@ -60,3 +62,43 @@ def kernel_sort(x: jnp.ndarray, *, chunk: int = 512, w: int = 128,
         rows = merge2(rows[0::2], rows[1::2])
     out = rows[0, :n]
     return out if descending else out[::-1]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "w", "descending",
+                                             "interpret"))
+def kernel_argsort(keys: jnp.ndarray, *, chunk: int = 256, w: int = 32,
+                   descending: bool = True,
+                   interpret: bool = None) -> jnp.ndarray:
+    """Stable argsort of a 1-D array, entirely in Pallas KV kernels.
+
+    The two-level sorter of ``kernel_sort`` over (key, rank) lanes: one KV
+    chunk-sort ``pallas_call``, then partitioned KV FLiMS merge passes. The
+    rank lane (original positions) breaks ties and *is* the result — matches
+    ``jnp.argsort(stable=True)`` bit-for-bit in either direction (ascending
+    is sorted natively by flipping the key comparison, not by mirroring).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    n = keys.shape[0]
+    if n <= 1:
+        return jnp.zeros((n,), jnp.int32)
+    c = 1
+    while c < min(chunk, n):
+        c *= 2
+    m2 = 1
+    while m2 < -(-n // c):
+        m2 *= 2
+    n_pad = m2 * c
+    _, last = bound_keys(keys.dtype, descending)
+    kp = jnp.pad(keys, (0, n_pad - n), constant_values=last)
+    rp = jnp.where(jnp.arange(n_pad) < n,
+                   jnp.arange(n_pad, dtype=jnp.int32), INVALID_RANK)
+    k2, r2 = sort_chunks_kv_pallas(kp.reshape(-1, c), rp.reshape(-1, c),
+                                   descending=descending, interpret=interpret)
+    ww = min(w, c)
+    merge2 = jax.vmap(lambda ka, ra, kb, rb: flims_merge_kv_pallas(
+        ka, ra, kb, rb, w=ww, block_out=max(ww, 4096),
+        descending=descending, interpret=interpret))
+    while k2.shape[0] > 1:
+        k2, r2 = merge2(k2[0::2], r2[0::2], k2[1::2], r2[1::2])
+    return r2[0, :n]

@@ -32,45 +32,61 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.flims import sentinel_for, next_pow2 as _next_pow2
-from repro.kernels.bitonic_sort import _bitonic_rows_desc
-from repro.kernels.flims_merge import _merge_kernel, element_block_spec
+from repro.core.lanes import INVALID_RANK
+from repro.kernels.bitonic_sort import (_bitonic_rows_desc, _sort_kv_kernel,
+                                        sort_chunks_kv_pallas)
+from repro.kernels.flims_merge import (_merge_kernel, _merge_kv_kernel,
+                                       bound_keys, element_block_spec,
+                                       lane_first, plus_inf_for)
 
 
-def padded_bank(values, offsets, cap: int):
-    """Gather a ragged batch into a dense sentinel-padded (S, cap) bank.
+def padded_bank(values, offsets, cap: int, fill=None):
+    """Gather a ragged batch into a dense padded (S, cap) bank.
 
     Shared by both segment-sort strategies and re-exported as
-    ``engine.pad_segments``. ``cap`` must cover the longest segment;
-    shorter tails are sentinel-filled so they sort last.
+    ``engine.pad_segments``. ``cap`` must cover the longest segment; shorter
+    tails are filled with ``fill`` (default: the dtype sentinel, which sorts
+    last descending — ascending callers pass ``plus_inf_for``).
     """
     S = offsets.shape[0] - 1
     N = values.shape[0]
-    sent = sentinel_for(values.dtype)
+    fill = sentinel_for(values.dtype) if fill is None else fill
     if N == 0:
-        return jnp.full((S, cap), sent, values.dtype)
+        return jnp.full((S, cap), fill, values.dtype)
     offsets = offsets.astype(jnp.int32)
     lens = jnp.diff(offsets)
     idx = jnp.arange(cap, dtype=jnp.int32)
     src = jnp.clip(offsets[:-1, None] + idx[None, :], 0, N - 1)
-    return jnp.where(idx[None, :] < lens[:, None], values[src], sent)
+    return jnp.where(idx[None, :] < lens[:, None], values[src], fill)
 
 
-def _plus_inf_for(dtype):
-    dtype = jnp.dtype(dtype)
-    if jnp.issubdtype(dtype, jnp.floating):
-        return jnp.array(jnp.inf, dtype)
-    return jnp.array(jnp.iinfo(dtype).max, dtype)
+def unpad_bank(bank, offsets, total: int):
+    """Inverse of ``padded_bank``: gather the valid prefixes back flat.
+
+    The single unpad gather shared by the segment-sort/argsort strategies
+    and re-exported as ``engine.unpad_segments``.
+    """
+    offsets = offsets.astype(jnp.int32)
+    S = bank.shape[0]
+    i = jnp.arange(total, dtype=jnp.int32)
+    s = jnp.clip(jnp.searchsorted(offsets, i, side="right") - 1, 0, S - 1)
+    return bank[s, i - offsets[s]]
 
 
-def _build_bank(buf, starts, lens, row0, cap_rows: int, w: int):
-    """Gather flat runs into a (cap_rows, w) row-aligned sentinel-padded bank.
+_plus_inf_for = plus_inf_for       # back-compat alias (moved to flims_merge)
+
+
+def _build_bank(buf, starts, lens, row0, cap_rows: int, w: int, fill=None):
+    """Gather flat runs into a (cap_rows, w) row-aligned padded bank.
 
     Run ``s`` (``buf[starts[s] : starts[s]+lens[s]]``) fills rows
-    ``[row0[s], row0[s+1])`` row-major; everything else is sentinel.
+    ``[row0[s], row0[s+1])`` row-major; everything else is ``fill``
+    (default: the dtype sentinel — rank banks pass ``INVALID_RANK``,
+    ascending key banks ``plus_inf_for``).
     """
-    sent = sentinel_for(buf.dtype)
+    fill = sentinel_for(buf.dtype) if fill is None else fill
     if buf.shape[0] == 0:
-        return jnp.full((cap_rows, w), sent, buf.dtype)
+        return jnp.full((cap_rows, w), fill, buf.dtype)
     rows = jnp.arange(cap_rows, dtype=jnp.int32)
     n_runs = starts.shape[0]
     s = jnp.clip(jnp.searchsorted(row0, rows, side="right") - 1, 0, n_runs - 1)
@@ -78,7 +94,7 @@ def _build_bank(buf, starts, lens, row0, cap_rows: int, w: int):
     idx = base[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
     valid = (idx >= 0) & (idx < lens[s][:, None])
     src = jnp.clip(starts[s][:, None] + idx, 0, buf.shape[0] - 1)
-    return jnp.where(valid, buf[src], sent)
+    return jnp.where(valid, buf[src], fill)
 
 
 def _corank_runs(o, la, lb, astart, bstart, a, b, steps: int):
@@ -230,6 +246,146 @@ def segmented_merge_pallas(a, a_offsets, b, b_offsets, *, w: int = 32,
 
 
 # --------------------------------------------------------------------------
+# KV (rank-lane) segmented merge: identical grid, one extra int32 ref per side
+# --------------------------------------------------------------------------
+
+def _corank_runs_kv(o, la, lb, astart, bstart, a, ra, b, rb, steps: int,
+                    descending: bool = True):
+    """Merge-path co-rank inside one (A-run, B-run) pair under the compound
+    (key, rank) order — the stable split. Payload-oblivious: only the
+    comparator lanes enter the search."""
+    first = lane_first(descending)
+    firstA, lastA = bound_keys(a.dtype, descending)
+    firstB, lastB = bound_keys(b.dtype, descending)
+    rank_lo = jnp.int32(jnp.iinfo(jnp.int32).min)
+    nA = max(a.shape[0], 1)
+    nB = max(b.shape[0], 1)
+    ap = a if a.shape[0] else jnp.full((1,), lastA, a.dtype)
+    bp = b if b.shape[0] else jnp.full((1,), lastB, b.dtype)
+    rap = ra if ra.shape[0] else jnp.full((1,), INVALID_RANK, jnp.int32)
+    rbp = rb if rb.shape[0] else jnp.full((1,), INVALID_RANK, jnp.int32)
+
+    def get(x, rx, n, start, l, i, first_k, last_k):
+        v = x[jnp.clip(start + i, 0, n - 1)]
+        r = rx[jnp.clip(start + i, 0, n - 1)]
+        v = jnp.where(i < 0, first_k, v)
+        r = jnp.where(i < 0, rank_lo, r)
+        v = jnp.where(i >= l, last_k, v)
+        r = jnp.where(i >= l, INVALID_RANK, r)
+        return v, r
+
+    lo = jnp.maximum(0, o - lb)
+    hi = jnp.minimum(o, la)
+
+    def step(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi + 1) // 2
+        ka, rka = get(ap, rap, nA, astart, la, mid - 1, firstA, lastA)
+        kb, rkb = get(bp, rbp, nB, bstart, lb, o - mid, firstB, lastB)
+        ok = first(ka, rka, kb, rkb)
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid - 1)
+
+    lo, hi = lax.fori_loop(0, steps, step, (lo, hi))
+    return lo
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_out", "w", "block_out", "descending",
+                                    "interpret"))
+def segmented_merge_runs_kv(a, ra, b, rb, a_starts, a_lens, b_starts, b_lens,
+                            *, n_out: int, w: int = 32, block_out: int = 1024,
+                            descending: bool = True, interpret: bool = True):
+    """Stable KV variant of ``segmented_merge_runs``: merge R run pairs of
+    (key, rank) lanes in ONE ``pallas_call``. Returns (keys, ranks).
+
+    Same flat (segment, block) grid, scalar-prefetched co-ranks, and bank
+    layout as the keys-only kernel — the co-rank partition is
+    payload-oblivious, so the only change is one extra int32 bank per side
+    and the compound comparator end-to-end.
+    """
+    R = a_starts.shape[0]
+    assert a.dtype == b.dtype and w & (w - 1) == 0
+    if R == 0 or n_out == 0:
+        return jnp.zeros((n_out,), a.dtype), jnp.zeros((n_out,), jnp.int32)
+    ra = ra.astype(jnp.int32)
+    rb = rb.astype(jnp.int32)
+    C = max(w, min(block_out, _next_pow2(n_out)))
+    C = (C // w) * w
+    cycles = C // w
+    Ha = cycles + 2
+    G = n_out // C + R
+
+    a_starts = a_starts.astype(jnp.int32)
+    b_starts = b_starts.astype(jnp.int32)
+    la = a_lens.astype(jnp.int32)
+    lb = b_lens.astype(jnp.int32)
+    lo_len = la + lb
+
+    nb = -(-lo_len // C)
+    blk0 = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(nb)])
+    g = jnp.arange(G, dtype=jnp.int32)
+    seg = jnp.clip(jnp.searchsorted(blk0, g, side="right") - 1, 0, R - 1)
+    o = jnp.minimum((g - blk0[seg]) * C, (lo_len[seg] // C) * C)
+
+    rra = -(-la // w) + Ha + 2
+    rrb = -(-lb // w) + Ha + 2
+    ra0 = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(rra)])
+    rb0 = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(rrb)])
+    RA = n_out // w + R * (Ha + 3)
+    RB = RA
+    _, lastK = bound_keys(a.dtype, descending)
+    abank = _build_bank(a, a_starts, la, ra0, RA, w, fill=lastK)
+    bbank = _build_bank(b, b_starts, lb, rb0, RB, w, fill=lastK)
+    arbank = _build_bank(ra, a_starts, la, ra0, RA, w, fill=INVALID_RANK)
+    brbank = _build_bank(rb, b_starts, lb, rb0, RB, w, fill=INVALID_RANK)
+
+    steps = max(1, math.ceil(math.log2(max(n_out, 2))) + 1)
+    acut = jax.vmap(lambda oo, s: _corank_runs_kv(
+        oo, la[s], lb[s], a_starts[s], b_starts[s], a, ra, b, rb, steps,
+        descending))(o, seg)
+    acut = acut.astype(jnp.int32)
+    bcut = o - acut
+    arow0 = jnp.minimum(ra0[seg] + acut // w, RA - Ha)
+    brow0 = jnp.minimum(rb0[seg] + bcut // w, RB - Ha)
+    la0 = acut % w
+    lb0 = bcut % w
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(G,),
+        in_specs=[
+            element_block_spec(Ha, w,
+                               lambda g, ar0, br0, la, lb: (ar0[g], 0)),
+            element_block_spec(Ha, w,
+                               lambda g, ar0, br0, la, lb: (ar0[g], 0)),
+            element_block_spec(Ha, w,
+                               lambda g, ar0, br0, la, lb: (br0[g], 0)),
+            element_block_spec(Ha, w,
+                               lambda g, ar0, br0, la, lb: (br0[g], 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, C), lambda g, *_: (g, 0)),
+                   pl.BlockSpec((1, C), lambda g, *_: (g, 0))],
+    )
+    kern = functools.partial(_merge_kv_kernel, w=w, cycles=cycles,
+                             descending=descending)
+    ok, orr = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((G, C), a.dtype),
+                   jax.ShapeDtypeStruct((G, C), jnp.int32)],
+        interpret=interpret,
+        name="flims_segmented_merge_kv",
+    )(arow0, brow0, la0, lb0, abank, arbank, bbank, brbank)
+
+    oo = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(lo_len)])
+    i = jnp.arange(n_out, dtype=jnp.int32)
+    s = jnp.clip(jnp.searchsorted(oo, i, side="right") - 1, 0, R - 1)
+    pos = i - oo[s]
+    gg = jnp.clip(blk0[s] + pos // C, 0, G - 1)
+    return ok[gg, pos % C], orr[gg, pos % C]
+
+
+# --------------------------------------------------------------------------
 # segmented sort
 # --------------------------------------------------------------------------
 
@@ -318,3 +474,111 @@ def segment_sort_two_phase(values, offsets, *, cap: int, chunk: int = 256,
     i = jnp.arange(N, dtype=jnp.int32)
     s = jnp.clip(jnp.searchsorted(offsets, i, side="right") - 1, 0, S - 1)
     return flat.reshape(S, cap)[s, i - offsets[s]]
+
+
+# --------------------------------------------------------------------------
+# segmented argsort: the same strategies over (key, rank) lanes
+# --------------------------------------------------------------------------
+
+def _rank_bank(offsets, cap: int):
+    """(S, cap) int32 bank of local positions; padding is INVALID_RANK."""
+    lens = jnp.diff(offsets.astype(jnp.int32))
+    idx = jnp.arange(cap, dtype=jnp.int32)
+    return jnp.where(idx[None, :] < lens[:, None], idx[None, :],
+                     INVALID_RANK)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "descending", "interpret"))
+def segment_sort_kv_pallas(keys, offsets, *, cap: int = 0,
+                           descending: bool = True, interpret: bool = True):
+    """Fused stable KV segment sort: ONE ``pallas_call`` carrying key and
+    rank banks through per-segment compound bitonic networks.
+
+    Returns ``(sorted_keys, perm)`` flat over the ragged batch, where
+    ``perm`` holds *segment-local* source positions: for segment ``s``,
+    ``keys[offsets[s] + perm[offsets[s]:offsets[s+1]]]`` is its stable sort.
+    """
+    assert keys.ndim == 1 and offsets.ndim == 1
+    S = offsets.shape[0] - 1
+    N = keys.shape[0]
+    if S <= 0 or N == 0:
+        return jnp.zeros((N,), keys.dtype), jnp.zeros((N,), jnp.int32)
+    cap = cap or _next_pow2(max(N, 1))
+    assert cap & (cap - 1) == 0 and cap >= 1
+    offsets = offsets.astype(jnp.int32)
+    _, lastK = bound_keys(keys.dtype, descending)
+    kbank = padded_bank(keys, offsets, cap, fill=lastK)
+    rbank = _rank_bank(offsets, cap)
+
+    spec = pl.BlockSpec((1, cap), lambda s: (s, 0))
+    ok, orr = pl.pallas_call(
+        functools.partial(_sort_kv_kernel, descending=descending),
+        grid=(S,),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((S, cap), keys.dtype),
+                   jax.ShapeDtypeStruct((S, cap), jnp.int32)],
+        interpret=interpret,
+        name="flims_segment_sort_kv",
+    )(kbank, rbank)
+    return unpad_bank(ok, offsets, N), unpad_bank(orr, offsets, N)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "descending", "interpret"))
+def segment_argsort_pallas(keys, offsets, *, cap: int = 0,
+                           descending: bool = True, interpret: bool = True):
+    """Stable per-segment argsort (fused strategy): local permutation only."""
+    _, perm = segment_sort_kv_pallas(keys, offsets, cap=cap,
+                                     descending=descending,
+                                     interpret=interpret)
+    return perm
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "chunk", "w", "descending",
+                                    "interpret"))
+def segment_argsort_two_phase(keys, offsets, *, cap: int, chunk: int = 256,
+                              w: int = 32, descending: bool = True,
+                              interpret: bool = True):
+    """Two-phase stable per-segment argsort: one KV chunk-sort
+    ``pallas_call`` over ALL segments' rows, then log2(cap/chunk) KV
+    segmented FLiMS merge passes. Mirrors ``segment_sort_two_phase`` with
+    rank lanes; the rank lane of the fully merged bank is the permutation.
+    """
+    assert keys.ndim == 1 and offsets.ndim == 1
+    S = offsets.shape[0] - 1
+    N = keys.shape[0]
+    if S <= 0 or N == 0:
+        return jnp.zeros((N,), jnp.int32)
+    assert cap & (cap - 1) == 0 and chunk & (chunk - 1) == 0
+    chunk = min(chunk, cap)
+    offsets = offsets.astype(jnp.int32)
+    _, lastK = bound_keys(keys.dtype, descending)
+    kbank = padded_bank(keys, offsets, cap, fill=lastK)
+    rbank = _rank_bank(offsets, cap)
+
+    # phase 1: stable KV sort of width-``chunk`` rows of every segment
+    kr, rr = sort_chunks_kv_pallas(
+        kbank.reshape(S * (cap // chunk), chunk),
+        rbank.reshape(S * (cap // chunk), chunk),
+        descending=descending, interpret=interpret)
+    kflat = kr.reshape(S * cap)
+    rflat = rr.reshape(S * cap)
+
+    # phase 2: pairwise KV segmented merge passes over uniform L-runs
+    # (earlier chunks hold smaller local ranks, so the compound comparator's
+    # rank tiebreak keeps every pass stable)
+    L = chunk
+    while L < cap:
+        m = cap // (2 * L)
+        j = jnp.arange(S * m, dtype=jnp.int32)
+        a_starts = (j // m) * cap + (j % m) * 2 * L
+        b_starts = a_starts + L
+        lens_l = jnp.full((S * m,), L, jnp.int32)
+        kflat, rflat = segmented_merge_runs_kv(
+            kflat, rflat, kflat, rflat, a_starts, lens_l, b_starts, lens_l,
+            n_out=S * cap, w=min(w, L), block_out=max(2 * L, w),
+            descending=descending, interpret=interpret)
+        L *= 2
+
+    return unpad_bank(rflat.reshape(S, cap), offsets, N)

@@ -180,8 +180,12 @@ def sample_topk(key, logits, k: int = 64, temperature: float = 1.0,
     if temperature <= 0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     variant = None if use_flims is None else ("flims" if use_flims else "xla")
-    vals, idx = engine.topk(logits, k, variant=variant)
+    # KV top-k: the token ids ride the payload lanes through the FLiMS
+    # selector tree alongside the logits (engine.topk(values=...)).
+    toks = jnp.broadcast_to(
+        jnp.arange(logits.shape[-1], dtype=jnp.int32), logits.shape)
+    vals, _, toks_k = engine.topk(logits, k, variant=variant, values=toks)
     gumbel = -jnp.log(-jnp.log(
         jax.random.uniform(key, vals.shape, minval=1e-9, maxval=1.0)))
     choice = jnp.argmax(vals / temperature + gumbel, axis=-1)
-    return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0]
+    return jnp.take_along_axis(toks_k, choice[:, None], axis=-1)[:, 0]

@@ -5,10 +5,12 @@ Two dispatch paths:
   GSPMD-friendly; experts shard over the model axis (EP) or their hidden dim
   shards (TP) per ShardingConfig. This is the path the 512-chip dry-run uses.
 - ``sorted``: dropless dispatch that orders tokens by expert with a stable
-  argsort served by ``repro.engine`` (planner-selected variant: FLiMS on TPU,
-  XLA on CPU) — the paper's sorter as a first-class framework feature. The
-  grouped path sorts all device groups in ONE batched engine call instead of
-  vmapping a per-group sorter.
+  KV sort served by ``repro.engine`` (planner-selected variant: FLiMS/Pallas
+  on TPU, XLA on CPU) — the paper's sorter as a first-class framework
+  feature. The dispatch permutation comes from ``engine.segment_argsort``'s
+  rank lanes and the (token, weight) payload rides with the keys, so the
+  grouped path orders all device groups in ONE ragged engine call with no
+  external argsort→gather round trip.
 """
 from __future__ import annotations
 
@@ -97,15 +99,15 @@ def moe_apply_sorted(p, x, cfg, capacity_factor: float = 1.25):
     E = cfg.n_experts
     w, idx = router_probs(p, x, cfg)
     xf = x.reshape(T, d)
-    flat_e = idx.reshape(T * k)                        # expert of each pair
+    flat_e = idx.reshape(T * k).astype(jnp.int32)      # expert of each pair
     flat_w = w.reshape(T * k)
     tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
-    # stable argsort on expert id (ascending): groups pairs by expert,
-    # original order preserved inside each group (stability = paper alg. 3).
-    order = engine.argsort(flat_e.astype(jnp.int32), descending=False)
-    e_sorted = flat_e[order]
-    t_sorted = tok[order]
-    w_sorted = flat_w[order]
+    # one KV engine call: stable sort by expert id (ascending) with the
+    # (token, weight) payload riding the lanes. Stability (paper alg. 3)
+    # keeps original order inside each expert group; the permutation is
+    # applied inside the engine, so no external argsort→gather round trip.
+    e_sorted, (t_sorted, w_sorted) = engine.sort(
+        flat_e, values=(tok, flat_w), stable=True, descending=False)
     cap = int(capacity_factor * T * k / E) + 1
     # rank of each pair within its expert group
     pos_in_e = jnp.arange(T * k) - jnp.searchsorted(e_sorted, e_sorted,
@@ -125,21 +127,27 @@ def moe_apply_sorted(p, x, cfg, capacity_factor: float = 1.25):
 def _group_dispatch_batched(p, xg, cfg, cap):
     """Sorted dispatch for all G device groups at once. xg: (G, T, d).
 
-    The (token, expert) pairs of every group are ordered by expert in ONE
-    batched stable argsort through ``repro.engine`` (stability keeps token
-    order inside each expert slab, paper alg. 3); only the scatter into
-    capacity slabs stays vmapped.
+    The (token, expert) pairs of every group are one ragged batch — G
+    uniform segments of T·k pairs — so the whole dispatch ordering is ONE
+    ``engine.segment_sort`` call: the permutation comes from
+    ``engine.segment_argsort``'s rank lanes (stability keeps token order
+    inside each expert slab, paper alg. 3) and the (token, weight) payload
+    is applied inside the engine — no flatten→argsort→gather round trip.
+    Only the scatter into capacity slabs stays vmapped.
     """
     G, T, d = xg.shape
     k, E = cfg.n_experts_active, cfg.n_experts
     w, idx = router_probs(p, xg, cfg)                  # (G, T, k)
-    flat_e = idx.reshape(G, T * k).astype(jnp.int32)
-    flat_w = w.reshape(G, T * k)
-    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
-    order = engine.argsort(flat_e, descending=False)   # one batched sort
-    e_sorted = jnp.take_along_axis(flat_e, order, axis=1)
-    w_sorted = jnp.take_along_axis(flat_w, order, axis=1)
-    t_sorted = tok[order]                              # (G, T*k)
+    flat_e = idx.reshape(G * T * k).astype(jnp.int32)
+    flat_w = w.reshape(G * T * k)
+    tok = jnp.tile(jnp.repeat(jnp.arange(T, dtype=jnp.int32), k), G)
+    offs = jnp.arange(G + 1, dtype=jnp.int32) * (T * k)
+    e_sorted, (t_sorted, w_sorted) = engine.segment_sort(
+        flat_e, offs, values=(tok, flat_w), stable=True, descending=False,
+        cap=T * k)
+    e_sorted = e_sorted.reshape(G, T * k)
+    t_sorted = t_sorted.reshape(G, T * k)
+    w_sorted = w_sorted.reshape(G, T * k)              # (G, T*k)
 
     def pack(e_sorted, t_sorted, xf):
         pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - jnp.searchsorted(
@@ -259,10 +267,8 @@ def moe_apply_ep(p, x, cfg, capacity_factor: float = 1.25,
             flat_e = idx.reshape(T * k).astype(jnp.int32)
             flat_w = wgt.reshape(T * k)
             tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
-            order = engine.argsort(flat_e, descending=False)
-            e_sorted = flat_e[order]
-            t_sorted = tok[order]
-            w_sorted = flat_w[order]
+            e_sorted, (t_sorted, w_sorted) = engine.sort(
+                flat_e, values=(tok, flat_w), stable=True, descending=False)
             pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - jnp.searchsorted(
                 e_sorted, e_sorted, side="left").astype(jnp.int32)
             mine = (e_sorted >= e0) & (e_sorted < e0 + E_loc)

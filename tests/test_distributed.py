@@ -49,6 +49,37 @@ def test_sample_sort_8dev():
     assert "OK" in out
 
 
+def test_sample_sort_payload_8dev():
+    """KV sample-sort: payload lanes (here: global indices, i.e. a
+    distributed argsort) exchange natively with the keys."""
+    out = _run("""
+        from repro.core.distributed import sample_sort
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(1)
+        n = 8 * 1024
+        x = rng.integers(-50, 50, n).astype(np.int32)   # heavy duplicates
+        # sentinel-valued keys: padding must still sort behind them, or
+        # garbage payload would land inside the count prefix (regression)
+        x[::97] = np.iinfo(np.int32).min
+        sh = NamedSharding(mesh, P("data"))
+        xs = jax.device_put(jnp.array(x), sh)
+        gidx = jax.device_put(jnp.arange(n, dtype=jnp.int32), sh)
+        res, pay = sample_sort(xs, mesh, axis="data", w=16, payload=gidx)
+        vals = np.array(res.values).reshape(8, -1)
+        idxs = np.array(pay).reshape(8, -1)
+        cnts = np.array(res.count)
+        assert not np.array(res.overflow).any()
+        keys = np.concatenate([vals[i][:cnts[i]] for i in range(8)])
+        perm = np.concatenate([idxs[i][:cnts[i]] for i in range(8)])
+        assert (keys == np.sort(x)[::-1]).all()
+        assert (x[perm] == keys).all()                  # payload rode along
+        assert (np.sort(perm) == np.arange(n)).all()    # a true permutation
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_sharded_train_step_matches_single_device():
     """One train step on a 2x4 mesh == the same step on 1 device."""
     out = _run("""

@@ -226,7 +226,14 @@ def test_heuristic_backend_split():
     key_cpu = plan_key("argsort", n=4096, dtype=np.int32, backend="cpu")
     key_tpu = plan_key("argsort", n=4096, dtype=np.int32, backend="tpu")
     assert heuristic_plan("argsort", key_cpu).variant == "xla"
-    assert heuristic_plan("argsort", key_tpu).variant == "flims"
+    assert heuristic_plan("argsort", key_tpu).variant == "pallas"
+    key_cpu = plan_key("segment_argsort", n=4096, dtype=np.int32,
+                       backend="cpu", segments=8)
+    key_tpu = plan_key("segment_argsort", n=4096, dtype=np.int32,
+                       backend="tpu", segments=8)
+    assert heuristic_plan("segment_argsort", key_cpu).variant == "xla"
+    assert heuristic_plan("segment_argsort",
+                          key_tpu).variant == "pallas_two_phase"
 
 
 def test_planner_cache_and_json_roundtrip(tmp_path):

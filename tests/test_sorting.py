@@ -111,6 +111,24 @@ def test_merge_k_empty_dtype():
     assert mk([jnp.array([3, 1], jnp.int16)]).dtype == jnp.int16
 
 
+def test_pmt_merge_kv_stable_and_padded():
+    """KV merge trees: payload rides along; ties order row-major; in the
+    padded variant padding sorts behind even real sentinel-valued keys."""
+    from repro.core.merge_tree import pmt_merge_kv, pmt_merge_kv_padded
+    rows = jnp.array([[3, 2, 1, 1], [3, 3, 1, 0]], jnp.int32)
+    pay = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    mk, mp = pmt_merge_kv(rows, pay, w=4)
+    np.testing.assert_array_equal(np.array(mk), [3, 3, 3, 2, 1, 1, 1, 0])
+    np.testing.assert_array_equal(np.array(mp), [0, 4, 5, 1, 2, 3, 6, 7])
+    m = np.iinfo(np.int32).min
+    rows = jnp.array([[5, m, 777, 777], [2, 1, m, 777]], jnp.int32)
+    pay = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    counts = jnp.array([2, 3], jnp.int32)
+    mk, mp = pmt_merge_kv_padded(rows, counts, pay, w=4)
+    np.testing.assert_array_equal(np.array(mk)[:5], [5, 2, 1, m, m])
+    np.testing.assert_array_equal(np.array(mp)[:5], [0, 4, 5, 1, 6])
+
+
 def test_pmt_merge_padded_enforces_counts():
     """counts/valid_is_count are honoured: garbage beyond the valid region
     must not leak into the merged prefix (sentinel contract)."""

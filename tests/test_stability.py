@@ -1,0 +1,232 @@
+"""Payload-lane stability: every argsort/KV variant vs jnp stable, bit-for-bit.
+
+The payload-lane refactor promises paper-algorithm-3 tie semantics end to
+end: every ``engine.argsort`` / ``segment_argsort`` variant and every
+``values=`` KV path must preserve input order on equal keys, in both
+directions, exactly like ``jnp.argsort(stable=True)``. Heavy-tie and
+all-equal inputs are the adversarial cases: any comparator that drops the
+rank lane (or any kernel partition that splits ties inconsistently) shows up
+here as a permutation mismatch.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # deterministic fallback sweep (see the module)
+    from _hypothesis_compat import given, settings, st
+
+from repro import engine
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+RNG = np.random.default_rng(23)
+
+
+def _exp_perm(x, descending):
+    return np.array(jnp.argsort(jnp.array(x), stable=True,
+                                descending=descending))
+
+
+# --------------------------------------------------------------------------
+# argsort variants: heavy ties / all-equal, both directions, bit-for-bit
+# --------------------------------------------------------------------------
+
+@given(st.lists(st.integers(0, 3), min_size=0, max_size=400),
+       st.booleans(), st.sampled_from(["flims", "pallas", "xla"]))
+def test_argsort_variant_stable_heavy_ties(vals, descending, variant):
+    x = np.asarray(vals, np.int32)
+    got = np.array(engine.argsort(jnp.array(x), descending=descending,
+                                  variant=variant))
+    np.testing.assert_array_equal(got, _exp_perm(x, descending),
+                                  err_msg=f"{variant} desc={descending}")
+
+
+@pytest.mark.parametrize("variant", ["flims", "pallas", "xla"])
+@pytest.mark.parametrize("descending", [True, False])
+@pytest.mark.parametrize("n", [1, 17, 64, 257])
+def test_argsort_variant_all_equal(variant, descending, n):
+    """All-equal keys: the permutation must be the identity."""
+    x = jnp.zeros((n,), jnp.int32)
+    got = np.array(engine.argsort(x, descending=descending, variant=variant))
+    np.testing.assert_array_equal(got, np.arange(n))
+
+
+@given(st.lists(st.floats(-2.0, 2.0), min_size=1, max_size=300),
+       st.booleans())
+def test_argsort_pallas_float_matches_xla(vals, descending):
+    x = np.asarray(vals, np.float32)
+    # quantise to force ties
+    x = np.round(x * 2) / 2
+    got = np.array(engine.argsort(jnp.array(x), descending=descending,
+                                  variant="pallas"))
+    np.testing.assert_array_equal(got, _exp_perm(x, descending))
+
+
+# --------------------------------------------------------------------------
+# sort(values=) — the KV path must apply the same stable permutation
+# --------------------------------------------------------------------------
+
+@given(st.lists(st.integers(0, 2), min_size=0, max_size=200), st.booleans(),
+       st.sampled_from(["flims", "pallas", "xla"]))
+def test_sort_values_stable(vals, descending, variant):
+    x = np.asarray(vals, np.int32)
+    v = np.arange(x.shape[0], dtype=np.int32)
+    keys, payload = engine.sort(jnp.array(x), values=jnp.array(v),
+                                descending=descending, variant=variant)
+    exp = _exp_perm(x, descending)
+    np.testing.assert_array_equal(np.array(payload), exp, err_msg=variant)
+    np.testing.assert_array_equal(np.array(keys), x[exp], err_msg=variant)
+
+
+def test_sort_stable_flag_without_values():
+    x = jnp.array([1, 1, 0, 1], jnp.int32)
+    np.testing.assert_array_equal(np.array(engine.sort(x, stable=True)),
+                                  [1, 1, 1, 0])
+
+
+# --------------------------------------------------------------------------
+# merge(values=) — ties take A first, then input order (algorithm 3)
+# --------------------------------------------------------------------------
+
+@given(st.lists(st.integers(0, 3), min_size=0, max_size=150),
+       st.lists(st.integers(0, 3), min_size=0, max_size=150),
+       st.booleans(), st.sampled_from(["ref", "banked", "pallas"]))
+def test_merge_values_stable(la, lb, descending, variant):
+    a = np.sort(np.asarray(la, np.int32))
+    b = np.sort(np.asarray(lb, np.int32))
+    if descending:
+        a, b = a[::-1], b[::-1]
+    a, b = a.copy(), b.copy()
+    va = np.arange(a.shape[0], dtype=np.int32)
+    vb = a.shape[0] + np.arange(b.shape[0], dtype=np.int32)
+    mk, mv = engine.merge(jnp.array(a), jnp.array(b),
+                          values=(jnp.array(va), jnp.array(vb)),
+                          descending=descending, variant=variant)
+    allk = np.concatenate([a, b])
+    allv = np.concatenate([va, vb])
+    # ties: A first, then input order — in BOTH directions (algorithm 3)
+    order = np.lexsort((allv, -allk if descending else allk))
+    np.testing.assert_array_equal(np.array(mk), allk[order],
+                                  err_msg=f"{variant} desc={descending}")
+    np.testing.assert_array_equal(np.array(mv), allv[order],
+                                  err_msg=f"{variant} desc={descending}")
+
+
+# --------------------------------------------------------------------------
+# segment_argsort / segment_sort(values=): per-segment stability
+# --------------------------------------------------------------------------
+
+def _seg_oracle(keys, offs, descending):
+    out = []
+    for s in range(offs.shape[0] - 1):
+        seg = keys[offs[s]:offs[s + 1]]
+        out.append(np.argsort(-seg if descending else seg, kind="stable"))
+    return (np.concatenate(out) if out else np.zeros((0,), np.int64))
+
+
+@pytest.mark.parametrize("variant",
+                         ["pallas_fused", "pallas_two_phase", "xla"])
+@pytest.mark.parametrize("descending", [True, False])
+@pytest.mark.parametrize("lens", [[7, 0, 19, 1, 64], [0, 0], [33] * 4, [256]])
+def test_segment_argsort_stable(variant, descending, lens):
+    keys = RNG.integers(0, 3, int(sum(lens))).astype(np.int32)  # heavy ties
+    offs = np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
+    got = np.array(engine.segment_argsort(jnp.array(keys), jnp.array(offs),
+                                          descending=descending,
+                                          variant=variant))
+    np.testing.assert_array_equal(got, _seg_oracle(keys, offs, descending),
+                                  err_msg=f"{variant} desc={descending}")
+
+
+def test_segment_sort_values_carries_payload():
+    lens = [5, 0, 40, 3]
+    keys = RNG.integers(0, 2, sum(lens)).astype(np.int32)
+    tok = RNG.integers(0, 99, sum(lens)).astype(np.int32)
+    wgt = RNG.standard_normal(sum(lens)).astype(np.float32)
+    offs = np.concatenate([[0], np.cumsum(lens)]).astype(np.int32)
+    sk, (st_, sw) = engine.segment_sort(
+        jnp.array(keys), jnp.array(offs),
+        values=(jnp.array(tok), jnp.array(wgt)), descending=False,
+        stable=True)
+    perm = _seg_oracle(keys, offs, False)
+    base = np.repeat(offs[:-1], lens)
+    src = base + perm
+    np.testing.assert_array_equal(np.array(sk), keys[src])
+    np.testing.assert_array_equal(np.array(st_), tok[src])
+    np.testing.assert_array_equal(np.array(sw), wgt[src])
+
+
+# --------------------------------------------------------------------------
+# topk: sentinel/padding regression + payload lanes
+# --------------------------------------------------------------------------
+
+def test_topk_sentinel_indices_never_point_at_padding():
+    """Regression: with fewer than k elements beating the sentinel (all--inf
+    floats, iinfo.min ints, or k > n) returned indices used to reach into the
+    power-of-two padding; they must stay inside [0, n)."""
+    from repro.core.topk import flims_topk
+    cases = [
+        (jnp.array([1.0, -jnp.inf, -jnp.inf, -jnp.inf, -jnp.inf]), 4),
+        (jnp.array([-jnp.inf] * 5), 3),
+        (jnp.array([np.iinfo(np.int32).min, 5,
+                    np.iinfo(np.int32).min], jnp.int32), 3),
+        (jnp.array([1.0, 2.0, -jnp.inf]), 5),          # k > n
+    ]
+    for x, k in cases:
+        v, i = flims_topk(x, k)
+        i = np.array(i)
+        assert (i >= 0).all() and (i < x.shape[-1]).all(), (x, k, i)
+        if k <= x.shape[-1]:                            # lax.top_k oracle
+            ev, ei = jax.lax.top_k(x, k)
+            np.testing.assert_array_equal(np.array(v), np.array(ev))
+            np.testing.assert_array_equal(i, np.array(ei))
+        else:                                          # overflow tail masked
+            sent = np.array(v)[x.shape[-1]:]
+            assert (sent == (np.finfo(np.float32).min
+                             if np.isfinite(sent).all() else -np.inf)).all() \
+                or (sent == -np.inf).all()
+
+
+def test_topk_values_payload_matches_indices():
+    x = RNG.standard_normal((3, 50)).astype(np.float32)
+    toks = np.broadcast_to(np.arange(50, dtype=np.int32), x.shape).copy()
+    for variant in ("flims", "xla"):
+        v, i, p = engine.topk(jnp.array(x), 7, values=jnp.array(toks),
+                              variant=variant)
+        np.testing.assert_array_equal(np.array(p), np.array(i),
+                                      err_msg=variant)
+
+
+# --------------------------------------------------------------------------
+# autotune robustness: raising candidates are infeasible, not fatal
+# --------------------------------------------------------------------------
+
+def test_autotune_records_infeasible_and_continues():
+    from repro.engine import registry
+
+    calls = {"n": 0}
+
+    @registry.register("argsort", "broken")
+    def _broken(keys, *, plan, descending, interpret):
+        calls["n"] += 1
+        raise RuntimeError("pallas lowering failed at this shape")
+
+    try:
+        engine.clear_plans()
+        x = jnp.array(RNG.integers(0, 9, 128).astype(np.int32))
+        plan = engine.autotune("argsort", x, repeats=1)
+        assert plan.variant in ("flims", "pallas", "xla")
+        key = engine.plan_key("argsort", n=128, dtype=np.int32)
+        bad = engine.default_planner.infeasible_for(key)
+        assert any(p.variant == "broken" for p in bad)
+        first_calls = calls["n"]
+        # a second tune must skip the recorded-infeasible candidates
+        engine.autotune("argsort", x, repeats=1)
+        assert calls["n"] == first_calls
+    finally:
+        del registry._REGISTRY["argsort"]["broken"]
+        engine.clear_plans()
