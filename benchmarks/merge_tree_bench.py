@@ -1,19 +1,100 @@
-"""Paper §2.1 (fig.1): parallel merge tree throughput for K input lists."""
+"""Paper §2.1 (fig.1): parallel merge trees — and PR 3's MergeSchedule sweep.
+
+Four sections:
+
+- ``pmt/K*``        classic PMT throughput for K uniform input lists
+                    (now schedule-routed through ``engine.schedule``).
+- ``merge_runs/*``  the engine op across executors: ``xla``,
+                    ``tree_vmapped`` (one vmapped merge per level, one HBM
+                    round trip each), and ``tree_pallas@L`` (L tree levels
+                    fused per ``pallas_call``, intermediates in scratch).
+- ``full_sort/*``   end-to-end chunk-sort + merge-tree reduction — the
+                    acceptance comparison: fused levels vs the per-level
+                    vmapped tree on a complete sort.
+- ``sample_local/*`` the sample-sort local phase shape: P sentinel-padded
+                    count-valid runs reduced per schedule
+                    (``pmt_merge_padded``).
+"""
 import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_fn
 from repro.core import pmt_merge
+from repro.core.merge_tree import pmt_merge_padded
+from repro.engine.schedule import (MergeSchedule, default_interpret,
+                                   merge_runs, reduce_rows)
+
+_INTERP = default_interpret()    # interpret off-TPU, Mosaic on TPU
+
+
+def _sched(tag):
+    """Each executor at its own best tile parameters (the planner's job):
+    interpret-mode Pallas pays per-(group, block) overhead, so its sweet
+    spot is wide lanes and big blocks; the vmapped scan prefers w=32."""
+    if tag == "xla":
+        return MergeSchedule("xla")
+    if tag == "vmapped":
+        return MergeSchedule("tree_vmapped", w=32)
+    lv = int(tag.rsplit("L", 1)[1])
+    return MergeSchedule("tree_pallas", levels_per_pass=lv, w=128,
+                         block_out=4096)
 
 
 def run():
     rng = np.random.default_rng(3)
     out = []
-    for K in (4, 16, 64):
-        n = (1 << 20) // K
+
+    # --- classic PMT rows (schedule-routed) --------------------------------
+    for K in (4, 16):
+        n = (1 << 18) // K
         rows_ = np.sort(rng.integers(-10**9, 10**9, (K, n)).astype(np.int32),
                         axis=1)[:, ::-1].copy()
         jr = jnp.array(rows_)
         us = time_fn(lambda: pmt_merge(jr, w=32))
         out.append(row(f"pmt/K{K}", us, f"Melem_s={K * n / us:.1f}"))
+
+    # --- engine merge_runs executors ---------------------------------------
+    K, n = 64, 1 << 10                                  # 64 runs of 1024
+    runs = np.sort(rng.integers(-10**9, 10**9, (K, n)).astype(np.int32),
+                   axis=1)[:, ::-1].reshape(-1)
+    offs = np.arange(K + 1, dtype=np.int32) * n
+    jk, jo = jnp.array(runs), jnp.array(offs)
+    for tag in ("xla", "vmapped", "pallas_L1", "pallas_L2", "pallas_L3"):
+        s = _sched(tag)
+        us = time_fn(lambda s=s: merge_runs(jk, jo, schedule=s,
+                                            interpret=_INTERP))
+        out.append(row(f"merge_runs/K{K}/{tag}", us,
+                       f"Melem_s={K * n / us:.1f}"))
+
+    # --- full sort: fused levels vs per-level tree -------------------------
+    # Complete sort (chunk sort + tree reduction), each variant at its best
+    # schedule: the vmapped tree at flims_sort's classic chunk=512, the
+    # Pallas trees at the longer chunks their per-group block floor favours.
+    n_full = 1 << 16
+    x = jnp.array(rng.integers(-10**9, 10**9, n_full).astype(np.int32))
+    from repro.core.mergesort import sort_chunks
+
+    def full_sort(chunk, sched):
+        return reduce_rows(sort_chunks(x, chunk), schedule=sched,
+                           interpret=_INTERP)
+
+    for tag, chunk in (("vmapped", 512), ("vmapped", 2048),
+                       ("pallas_L1", 2048), ("pallas_L2", 4096),
+                       ("pallas_L3", 4096)):
+        s = _sched(tag)
+        us = time_fn(lambda s=s, c=chunk: full_sort(c, s))
+        out.append(row(f"full_sort/n2^16/{tag}/c{chunk}", us,
+                       f"Melem_s={n_full / us:.1f}"))
+
+    # --- sample-sort local phase: P padded count-valid runs ----------------
+    P, cap = 8, 1 << 12
+    lists = np.sort(rng.integers(-10**9, 10**9, (P, cap)).astype(np.int32),
+                    axis=1)[:, ::-1].copy()
+    counts = rng.integers(cap // 2, cap, P).astype(np.int32)
+    jl, jc = jnp.array(lists), jnp.array(counts)
+    for tag in ("vmapped", "pallas_L1", "pallas_L2", "pallas_L3"):
+        s = _sched(tag)
+        us = time_fn(lambda s=s: pmt_merge_padded(jl, jc, w=32, schedule=s))
+        out.append(row(f"sample_local/P{P}/{tag}", us,
+                       f"Melem_s={P * cap / us:.1f}"))
     return out

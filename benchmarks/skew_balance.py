@@ -1,13 +1,16 @@
 """Paper §4.1: skewness optimisation — dequeue balance on duplicate data.
 
 Derived: mean |k - w/2| per cycle (0 = perfectly balanced consumption) for
-plain vs skew-optimised selectors, plus throughput.
+plain vs skew-optimised selectors, plus throughput — on the raw banked
+dataflow AND through the engine paths that now expose ``tie=``
+(``engine.merge`` and the ``merge_runs`` vmapped tree, PR 3).
 """
 import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import row, time_fn
 from repro.core import flims_merge_banked
+from repro import engine
 
 
 def run(n: int = 1 << 16, w: int = 32):
@@ -28,4 +31,18 @@ def run(n: int = 1 << 16, w: int = 32):
         us = time_fn(lambda t=tie: flims_merge_banked(ja, jb, w, tie=t))
         out.append(row(f"skew/{tie}/w{w}", us,
                        f"imbalance={imb:.2f};Melem_s={2 * n / us:.1f}"))
+
+    # the engine paths: tie= plumbed through Plan/MergeSchedule
+    plan = engine.Plan("banked", w=w)
+    for tie in ("b", "skew"):
+        us = time_fn(lambda t=tie: engine.merge(ja, jb, tie=t, plan=plan))
+        out.append(row(f"skew/engine_merge/{tie}/w{w}", us,
+                       f"Melem_s={2 * n / us:.1f}"))
+    runs = jnp.concatenate([ja, jb])
+    offs = jnp.array([0, n, 2 * n], jnp.int32)
+    for tie in ("b", "skew"):
+        us = time_fn(lambda t=tie: engine.merge_runs(
+            runs, offs, tie=t, plan=engine.Plan("tree_vmapped", w=w)))
+        out.append(row(f"skew/merge_runs/{tie}/w{w}", us,
+                       f"Melem_s={2 * n / us:.1f}"))
     return out

@@ -8,8 +8,8 @@ from repro.core.butterfly import (bitonic_merge_full, bitonic_sort,
 from repro.core.flims import (flims_merge, flims_merge_banked,
                               flims_merge_kv_stable, flims_merge_ref,
                               sentinel_for)
-from repro.core.lanes import (key_compare, make_lanes, merge_lanes,
-                              stable_compare)
+from repro.core.lanes import (key_compare, key_eq, make_lanes, merge_lanes,
+                              skew_compare, stable_compare)
 from repro.core.mergesort import (flims_argsort, flims_sort, flims_sort_kv,
                                   sort_chunks)
 from repro.core.merge_tree import (merge_k, pmt_merge, pmt_merge_kv,
@@ -19,8 +19,9 @@ from repro.core.baselines import basic_merge, mms_merge, wms_merge
 
 __all__ = [
     "flims_merge", "flims_merge_banked", "flims_merge_ref",
-    "flims_merge_kv_stable", "sentinel_for", "key_compare", "make_lanes",
-    "merge_lanes", "stable_compare", "butterfly_sort", "bitonic_sort",
+    "flims_merge_kv_stable", "sentinel_for", "key_compare", "key_eq",
+    "make_lanes", "merge_lanes", "skew_compare", "stable_compare",
+    "butterfly_sort", "bitonic_sort",
     "bitonic_merge_full", "cas_stage", "flims_sort", "flims_argsort",
     "flims_sort_kv", "sort_chunks", "merge_k", "pmt_merge", "pmt_merge_kv",
     "pmt_merge_kv_padded", "flims_topk",

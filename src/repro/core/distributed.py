@@ -43,7 +43,7 @@ class ShardedSort(NamedTuple):
 
 
 def _local_pass(xl: jnp.ndarray, payload, axis_name: str, n_dev: int,
-                cap: int, w: int):
+                cap: int, w: int, merge_schedule=None):
     n_local = xl.shape[0]
     # descending local sort through the engine (planner picks the variant;
     # an explicit plan pins the FLiMS reference dataflow's w). With payload
@@ -100,7 +100,8 @@ def _local_pass(xl: jnp.ndarray, payload, axis_name: str, n_dev: int,
                     [pv, jnp.zeros((grow, cap), pv.dtype)]), precv)
     any_ovf = lax.pmax(overflow.astype(jnp.int32), axis_name)
     if payload is None:
-        merged = pmt_merge(recv, w=min(w, _next_pow2(cap)))
+        merged = pmt_merge(recv, w=min(w, _next_pow2(cap)),
+                           schedule=merge_schedule)
         return ShardedSort(merged, jnp.sum(cnt).reshape(1),
                            any_ovf.astype(bool).reshape(1))
     # validity-aware KV merge: padding must sort behind *real* sentinel-
@@ -108,14 +109,16 @@ def _local_pass(xl: jnp.ndarray, payload, axis_name: str, n_dev: int,
     cnt_pad = jnp.concatenate(
         [cnt, jnp.zeros((k_pad - cnt.shape[0],), cnt.dtype)])
     merged, pmerged = pmt_merge_kv_padded(recv, cnt_pad, precv,
-                                          w=min(w, _next_pow2(cap)))
+                                          w=min(w, _next_pow2(cap)),
+                                          schedule=merge_schedule)
     return (ShardedSort(merged, jnp.sum(cnt).reshape(1),
                         any_ovf.astype(bool).reshape(1)), pmerged)
 
 
-@partial(jax.jit, static_argnames=("mesh", "axis", "w", "cap_factor"))
+@partial(jax.jit, static_argnames=("mesh", "axis", "w", "cap_factor",
+                                   "merge_schedule"))
 def sample_sort(x: jnp.ndarray, mesh, axis: str = "data", w: int = 32,
-                cap_factor: int = 4, payload=None):
+                cap_factor: int = 4, payload=None, merge_schedule=None):
     """Sort a 1-D array sharded over ``axis`` of ``mesh``. Descending.
 
     Returns per-device padded runs; `values` with spec P(axis) concatenates to
@@ -124,18 +127,23 @@ def sample_sort(x: jnp.ndarray, mesh, axis: str = "data", w: int = 32,
     where each payload leaf is the (P*cap,)-per-device array permuted
     identically to `values` — keys and payloads exchange natively, and ties
     keep their input order (stable, paper algorithm 3).
+
+    ``merge_schedule`` (an ``engine.schedule.MergeSchedule``) selects the
+    executor of step 4's local K-way reduction — per-level vmapped FLiMS
+    merges by default, or the fused Pallas merge tree.
     """
     n_dev = mesh.shape[axis]
     n_local = x.shape[0] // n_dev
     cap = min(n_local, cap_factor * max(n_local // n_dev, 1))
     if payload is None:
         fn = partial(_local_pass, payload=None, axis_name=axis, n_dev=n_dev,
-                     cap=cap, w=w)
+                     cap=cap, w=w, merge_schedule=merge_schedule)
         return jax.shard_map(
             fn, mesh=mesh, in_specs=P(axis),
             out_specs=ShardedSort(P(axis), P(axis), P(axis)),
             check_vma=False)(x)
-    fn = partial(_local_pass, axis_name=axis, n_dev=n_dev, cap=cap, w=w)
+    fn = partial(_local_pass, axis_name=axis, n_dev=n_dev, cap=cap, w=w,
+                 merge_schedule=merge_schedule)
     pspec = jax.tree.map(lambda _: P(axis), payload)
     return jax.shard_map(
         fn, mesh=mesh, in_specs=(P(axis), pspec),

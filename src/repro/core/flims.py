@@ -41,7 +41,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.lanes import (KEY, VAL, flims_cycle, key_compare, make_lanes,
-                              merge_lanes, sentinel_for, stable_compare)
+                              merge_lanes, sentinel_for, skew_compare,
+                              stable_compare)
 
 
 # --------------------------------------------------------------------------
@@ -69,17 +70,20 @@ def _pad_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
 # sorted-space reference (oracle)
 # --------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("w",))
-def flims_merge_ref(a: jnp.ndarray, b: jnp.ndarray, w: int = 128) -> jnp.ndarray:
+@partial(jax.jit, static_argnames=("w", "tie"))
+def flims_merge_ref(a: jnp.ndarray, b: jnp.ndarray, w: int = 128,
+                    tie: str = "b") -> jnp.ndarray:
     """Merge two descending-sorted 1-D arrays; returns descending merged array.
 
     Key-only lanes through `lanes.merge_lanes`: per iteration (= hardware
     cycle), the MAX selector on (sA, reverse(sB)) — the half-cleaner of a
     2w bitonic partial merger — then the butterfly CAS network (paper fig. 9).
-    Ties dequeue from B (algorithm 1).
+    ``tie='b'`` dequeues ties from B (algorithm 1); ``tie='skew'`` oscillates
+    the dequeue side on ties (algorithm 2 — same merged keys, balanced rates).
     """
     assert a.ndim == b.ndim == 1
-    out = merge_lanes(make_lanes(a), make_lanes(b), w=w, compare=key_compare)
+    out = merge_lanes(make_lanes(a), make_lanes(b), w=w, compare=key_compare,
+                      tie=tie)
     return out[KEY]
 
 
@@ -134,7 +138,7 @@ def flims_merge_banked(a: jnp.ndarray, b: jnp.ndarray, w: int = 128,
         if tie == "b":
             sel_cmp = key_compare
         else:  # skew: {cA,dir} > {cB,!dir}  → on ties take A iff dir==1
-            sel_cmp = lambda x, y: (x > y) | ((x == y) & dirb)
+            sel_cmp = skew_compare(dirb)
         chunk, take_a = flims_cycle(cA, cBr, key_compare,
                                     select_compare=sel_cmp)
         k = jnp.sum(take_a.astype(jnp.int32))

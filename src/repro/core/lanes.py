@@ -78,6 +78,25 @@ def key_compare(x, y):
     return kx > ky
 
 
+def key_eq(x, y):
+    """Key-lane equality — the tie predicate the skew selector gates on."""
+    kx = x[KEY] if isinstance(x, dict) else x
+    ky = y[KEY] if isinstance(y, dict) else y
+    return kx == ky
+
+
+def skew_compare(dirb, compare: Optional[Compare] = None):
+    """Paper §4.1 / algorithm 2 selector: ``{cA, dir} > {cB, !dir}``.
+
+    ``dirb`` is the per-lane oscillating direction bit (True → ties dequeue
+    from A this cycle); the returned comparator is the *selector* order only
+    — the positional dir bit must never enter the CAS network, so pass it via
+    ``flims_cycle(select_compare=...)``. Key-only: with a rank lane the
+    compound order has no ties and skew would break stability."""
+    compare = compare or key_compare
+    return lambda x, y: compare(x, y) | (key_eq(x, y) & dirb)
+
+
 def stable_compare(x, y):
     """The canonical lane order: key descending, then rank ascending.
 
@@ -143,7 +162,8 @@ def topk_node(a, b, compare: Optional[Compare] = None):
     return butterfly_sort(sel, compare=compare)
 
 
-def merge_lanes(a, b, *, w: int = 128, compare: Optional[Compare] = None):
+def merge_lanes(a, b, *, w: int = 128, compare: Optional[Compare] = None,
+                tie: str = "b"):
     """Sorted-space FLiMS merge of two descending 1-D lane sets.
 
     The generic scalar-pointer formulation (paper fig. 9 / §5.1): per cycle,
@@ -151,10 +171,17 @@ def merge_lanes(a, b, *, w: int = 128, compare: Optional[Compare] = None):
     ``(A, reverse(B))``, advance the pointers by the selector counts. With
     key-only lanes and ``key_compare`` this is algorithm 1 (ties dequeue
     from B); with rank lanes and ``stable_compare`` it is algorithm 3.
+    ``tie='skew'`` is algorithm 2: the oscillating dir bit rides the scan
+    carry and gates the selector on key ties (key-only lanes — the compound
+    stable order has no ties for skew to balance).
     Returns the merged lane set of length ``len(a) + len(b)``.
     """
     assert a[KEY].ndim == b[KEY].ndim == 1
     assert w & (w - 1) == 0
+    assert tie in ("b", "skew")
+    if tie == "skew":
+        assert not (isinstance(a, dict) and RANK in a), \
+            "tie='skew' is key-only (rank lanes leave no ties to balance)"
     compare = compare or compare_for(a)
     n_out = a[KEY].shape[0] + b[KEY].shape[0]
     if n_out == 0:
@@ -170,13 +197,15 @@ def merge_lanes(a, b, *, w: int = 128, compare: Optional[Compare] = None):
         return jax.tree.map(lambda x: x[::-1], out) if rev else out
 
     def body(carry, _):
-        pA, pB = carry
+        pA, pB, dirb = carry
+        sel_cmp = skew_compare(dirb, compare) if tie == "skew" else None
         chunk, take_a = flims_cycle(slice_at(ap, pA, False),
-                                    slice_at(bp, pB, True), compare)
+                                    slice_at(bp, pB, True), compare,
+                                    select_compare=sel_cmp)
         k = jnp.sum(take_a.astype(jnp.int32))
-        return (pA + k, pB + (w - k)), chunk
+        return (pA + k, pB + (w - k), ~take_a), chunk
 
-    (_, _), chunks = lax.scan(body, (jnp.int32(0), jnp.int32(0)), None,
-                              length=cycles)
+    init = (jnp.int32(0), jnp.int32(0), jnp.zeros((w,), bool))
+    (_, _, _), chunks = lax.scan(body, init, None, length=cycles)
     return jax.tree.map(
         lambda x: x.reshape((-1,) + x.shape[2:])[:n_out], chunks)

@@ -1,12 +1,18 @@
 """Parallel merge trees (paper §2.1, figs. 1-2): PMT and HPMT in JAX.
 
-A PMT merges 2^L sorted lists through a binary tree of FLiMS 2-way mergers.
+A PMT merges K sorted lists through a binary tree of FLiMS 2-way mergers.
 An HPMT feeds a PMT from K-leaf single-rate mergers to merge many lists in a
 single pass while keeping the output rate high.
 
-On TPU the "tree" is a reduction schedule, not physical pipelines: each level
-is one vmapped FLiMS merge over the surviving pairs (all pairs of a level are
-independent, exactly like the independent merger blocks of fig. 1).
+Since PR 3 the tree itself lives in ONE place: every function here compiles
+to a ``repro.engine.schedule.MergeSchedule`` (DESIGN.md §5) instead of
+carrying a private level loop. The default schedule is the classic
+``tree_vmapped`` reduction — each level one vmapped FLiMS merge over the
+surviving pairs, exactly the independent merger blocks of fig. 1 — and any
+K >= 1 works (non-power-of-two trees are completed with empty sentinel
+runs). Passing ``schedule=`` swaps the executor, e.g.
+``MergeSchedule("tree_pallas", levels_per_pass=2)`` for the fused Pallas
+merge-tree kernel.
 """
 from __future__ import annotations
 
@@ -16,56 +22,64 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.flims import flims_merge_ref, _pad_to, sentinel_for
-from repro.core.lanes import KEY, RANK, VAL, merge_lanes, stable_compare
+from repro.core.flims import sentinel_for
 
 
-@partial(jax.jit, static_argnames=("w",))
-def pmt_merge(lists: jnp.ndarray, w: int = 32) -> jnp.ndarray:
-    """Merge ``lists`` of shape (K, n) — K descending rows, K a power of 2.
+@partial(jax.jit, static_argnames=("w", "tie", "schedule"))
+def pmt_merge(lists: jnp.ndarray, w: int = 32, tie: str = "b",
+              schedule=None) -> jnp.ndarray:
+    """Merge ``lists`` of shape (K, n) — K descending rows, any K >= 1.
 
-    Returns the (K*n,) merged descending array. Each tree level is a vmapped
-    FLiMS merge (the paper's rate-doubling levels).
+    Returns the (K*n,) merged descending array. The reduction executes the
+    resolved MergeSchedule (default: one vmapped FLiMS merge per tree level,
+    the paper's rate-doubling levels; ``tie='skew'`` applies algorithm 2's
+    oscillating selector at every node of the default schedule).
     """
-    K = lists.shape[0]
-    assert K & (K - 1) == 0, "K must be a power of two"
-    rows = lists
-    merge = jax.vmap(lambda a, b: flims_merge_ref(a, b, w))
-    while rows.shape[0] > 1:
-        rows = merge(rows[0::2], rows[1::2])
-    return rows[0]
+    from repro.engine.schedule import (default_interpret, reduce_rows,
+                                       schedule_or)
+    K, n = lists.shape
+    if K == 1:
+        return lists[0]
+    return reduce_rows(lists, schedule=schedule_or(schedule, w, tie),
+                       interpret=default_interpret())
 
 
-def _pmt_reduce_lanes(lanes, w: int):
-    """Binary tree of vmapped stable lane merges over the leading row axis."""
-    merge = jax.vmap(
-        lambda a, b: merge_lanes(a, b, w=w, compare=stable_compare))
-    while lanes[KEY].shape[0] > 1:
-        lanes = merge(jax.tree.map(lambda v: v[0::2], lanes),
-                      jax.tree.map(lambda v: v[1::2], lanes))
-    return jax.tree.map(lambda v: v[0], lanes)
+def _rowmajor_ranks(K: int, n: int):
+    return (jnp.arange(K, dtype=jnp.int32)[:, None] * n
+            + jnp.arange(n, dtype=jnp.int32)[None, :])
 
 
-@partial(jax.jit, static_argnames=("w",))
-def pmt_merge_kv(keys: jnp.ndarray, payload, w: int = 32):
+def _gather_payload(payload, ranks, modulo: int):
+    """Apply the merged rank permutation to a payload pytree of row banks.
+    ``ranks >= modulo`` mark invalid slots (the padded variant); they gather
+    the padding position's own payload — the lane-carried behaviour."""
+    idx = jnp.where(ranks < modulo, ranks, ranks - modulo)
+    return jax.tree.map(lambda v: v.reshape((-1,) + v.shape[2:])[idx],
+                        payload)
+
+
+@partial(jax.jit, static_argnames=("w", "schedule"))
+def pmt_merge_kv(keys: jnp.ndarray, payload, w: int = 32, schedule=None):
     """Stable KV PMT (fig. 1 with payload lanes): merge K descending (K, n)
-    key rows carrying a payload pytree of (K, n)-leaf rows.
+    key rows carrying a payload pytree of (K, n)-leaf rows; any K >= 1.
 
-    Each tree level is a vmapped stable FLiMS lane merge (paper algorithm 3)
-    with row-major ranks: ties order lower-row-first, then by position.
+    The schedule reduces (key, rank) lanes with row-major ranks — ties order
+    lower-row-first, then by position (paper algorithm 3) — and the payload
+    is gathered once by the merged rank permutation.
     Returns ``(merged_keys, merged_payload)`` of length K*n.
     """
+    from repro.engine.schedule import (default_interpret, reduce_rows,
+                                       schedule_or)
     K, n = keys.shape
-    assert K & (K - 1) == 0, "K must be a power of two"
-    rank = (jnp.arange(K, dtype=jnp.int32)[:, None] * n
-            + jnp.arange(n, dtype=jnp.int32)[None, :])
-    out = _pmt_reduce_lanes({KEY: keys, RANK: rank, VAL: payload}, w)
-    return out[KEY], out[VAL]
+    mk, mr = reduce_rows(keys, ranks=_rowmajor_ranks(K, n),
+                         schedule=schedule_or(schedule, w),
+                         interpret=default_interpret())
+    return mk, _gather_payload(payload, mr, K * n)
 
 
-@partial(jax.jit, static_argnames=("w",))
+@partial(jax.jit, static_argnames=("w", "schedule"))
 def pmt_merge_kv_padded(keys: jnp.ndarray, counts: jnp.ndarray, payload,
-                        w: int = 32):
+                        w: int = 32, schedule=None):
     """KV PMT over padded rows with per-row validity (the sample-sort
     exchange shape). Enforced like ``pmt_merge_padded``, with one extra
     guarantee the payload lanes need: invalid tail positions get the
@@ -74,46 +88,51 @@ def pmt_merge_kv_padded(keys: jnp.ndarray, counts: jnp.ndarray, payload,
     strictly behind them and the merged payload prefix of length
     ``sum(counts)`` is exact. Returns ``(merged_keys, merged_payload)``.
     """
+    from repro.engine.schedule import (default_interpret, reduce_rows,
+                                       schedule_or)
     K, n = keys.shape
-    assert K & (K - 1) == 0, "K must be a power of two"
     pos = jnp.arange(n, dtype=jnp.int32)
     valid = pos[None, :] < counts[:, None]
-    base = jnp.arange(K, dtype=jnp.int32)[:, None] * n + pos[None, :]
+    base = _rowmajor_ranks(K, n)
     rank = jnp.where(valid, base, K * n + base)
     masked = jnp.where(valid, keys, sentinel_for(keys.dtype))
-    out = _pmt_reduce_lanes({KEY: masked, RANK: rank, VAL: payload}, w)
-    return out[KEY], out[VAL]
+    mk, mr = reduce_rows(masked, ranks=rank,
+                         schedule=schedule_or(schedule, w),
+                         interpret=default_interpret())
+    return mk, _gather_payload(payload, mr, K * n)
 
 
 def merge_k(arrays: Sequence[jnp.ndarray], w: int = 32,
             dtype=None) -> jnp.ndarray:
     """Merge K descending arrays of arbitrary (unequal) lengths: HPMT-style.
 
-    Python-level binary tree over jitted 2-way merges (each distinct shape
-    pair compiles once; the tree has ceil(log2 K) levels like fig. 1).
-    ``dtype`` fixes the element type of the empty result when no input
-    carries one (all inputs empty or absent); defaults to float32, or to the
-    first input's dtype when any input is given.
+    The ragged face of the same schedule: inputs concatenate into one flat
+    run list and reduce through ``engine.schedule.merge_runs``. ``dtype``
+    fixes the element type of the empty result when no input carries one
+    (all inputs empty or absent); defaults to float32, or to the first
+    input's dtype when any input is given.
     """
+    from repro.engine.schedule import (MergeSchedule, default_interpret,
+                                       merge_runs)
     inputs = [jnp.asarray(a) for a in arrays]
     if dtype is None and inputs:
         dtype = inputs[0].dtype
     arrays = [a for a in inputs if a.shape[0] > 0]
     if not arrays:
         return jnp.zeros((0,), dtype or jnp.float32)
-    while len(arrays) > 1:
-        nxt = []
-        for i in range(0, len(arrays) - 1, 2):
-            nxt.append(flims_merge_ref(arrays[i], arrays[i + 1], w))
-        if len(arrays) % 2:
-            nxt.append(arrays[-1])
-        arrays = nxt
-    return arrays[0]
+    flat = jnp.concatenate(arrays)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(jnp.array([a.shape[0] for a in arrays], jnp.int32))])
+    return merge_runs(flat, offsets, schedule=MergeSchedule("tree_vmapped",
+                                                            w=w),
+                      interpret=default_interpret())
 
 
-@partial(jax.jit, static_argnames=("w", "valid_is_count",))
+@partial(jax.jit, static_argnames=("w", "valid_is_count", "schedule"))
 def pmt_merge_padded(lists: jnp.ndarray, counts: jnp.ndarray, w: int = 32,
-                     valid_is_count: bool = True) -> jnp.ndarray:
+                     valid_is_count: bool = True,
+                     schedule=None) -> jnp.ndarray:
     """Merge K padded descending rows with per-row validity.
 
     Sentinel contract: invalid tail positions must sort last, so the merged
@@ -131,4 +150,4 @@ def pmt_merge_padded(lists: jnp.ndarray, counts: jnp.ndarray, w: int = 32,
     else:
         valid = counts.astype(bool)
     masked = jnp.where(valid, lists, sentinel_for(lists.dtype))
-    return pmt_merge(masked, w)
+    return pmt_merge(masked, w, schedule=schedule)

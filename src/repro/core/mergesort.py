@@ -1,9 +1,11 @@
 """FLiMS-based complete sorting (paper §8.2).
 
-Pipeline: bitonic sort-in-chunks (vectorised over rows) followed by
-log2(n/chunk) FLiMS merge passes (vmapped over the independent pairs of each
-pass) — exactly the paper's CPU scheme (sorted chunk size 512, then 2-way
-FLiMS merges), expressed in JAX.
+Pipeline: bitonic sort-in-chunks (vectorised over rows) followed by the
+chunk-tree reduction — which, since PR 3, is a
+``repro.engine.schedule.MergeSchedule`` rather than a private level loop.
+The default schedule is ``tree_vmapped`` (one vmapped FLiMS merge per pass,
+exactly the paper's CPU scheme: sorted chunk size 512, then 2-way FLiMS
+merges); ``schedule=`` swaps in the fused Pallas merge tree or XLA.
 
 ``flims_argsort`` is the same pipeline over key+rank lanes (`core/lanes.py`):
 ranks are the original input positions, every comparator is the canonical
@@ -18,10 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.butterfly import bitonic_sort
-from repro.core.flims import (flims_merge_ref, _pad_to,
-                              next_pow2 as _next_pow2)
-from repro.core.lanes import (INVALID_RANK, KEY, RANK, merge_lanes,
-                              stable_compare)
+from repro.core.flims import _pad_to, next_pow2 as _next_pow2
+from repro.core.lanes import INVALID_RANK, KEY, RANK, stable_compare
 
 
 @partial(jax.jit, static_argnames=("chunk",))
@@ -30,10 +30,12 @@ def sort_chunks(x: jnp.ndarray, chunk: int = 512) -> jnp.ndarray:
     return bitonic_sort(x.reshape(-1, chunk))
 
 
-@partial(jax.jit, static_argnames=("chunk", "w", "descending"))
+@partial(jax.jit, static_argnames=("chunk", "w", "descending", "schedule"))
 def flims_sort(x: jnp.ndarray, *, chunk: int = 512, w: int = 32,
-               descending: bool = True) -> jnp.ndarray:
+               descending: bool = True, schedule=None) -> jnp.ndarray:
     """Full sort of a 1-D array via FLiMS merge sort. Returns same length."""
+    from repro.engine.schedule import (default_interpret, reduce_rows,
+                                       schedule_or)
     n = x.shape[0]
     if n <= 1:
         return x
@@ -42,17 +44,15 @@ def flims_sort(x: jnp.ndarray, *, chunk: int = 512, w: int = 32,
     n_pad = _next_pow2(max(n, chunk))
     xp = _pad_to(x, n_pad)
     rows = sort_chunks(xp, chunk)                  # (m, chunk) descending rows
-    merge = jax.vmap(lambda a, b: flims_merge_ref(a, b, w))
-    while rows.shape[0] > 1:
-        a, b = rows[0::2], rows[1::2]
-        rows = merge(a, b)
-    out = rows[0, :n]
+    merged = reduce_rows(rows, schedule=schedule_or(schedule, w),
+                         interpret=default_interpret())
+    out = merged[:n]
     return out if descending else out[::-1]
 
 
-@partial(jax.jit, static_argnames=("chunk", "w", "descending"))
+@partial(jax.jit, static_argnames=("chunk", "w", "descending", "schedule"))
 def flims_argsort(keys: jnp.ndarray, *, chunk: int = 256, w: int = 32,
-                  descending: bool = True) -> jnp.ndarray:
+                  descending: bool = True, schedule=None) -> jnp.ndarray:
     """Stable argsort via key/rank FLiMS merge sort (paper alg. 3 semantics).
 
     Returns int32 permutation such that keys[perm] is sorted.
@@ -62,12 +62,17 @@ def flims_argsort(keys: jnp.ndarray, *, chunk: int = 256, w: int = 32,
         return jnp.zeros((n,), jnp.int32)
     if not descending:
         # stable ascending = mirror of stable descending on the reversed input
-        perm_rev = _argsort_desc(keys=keys[::-1], chunk=chunk, w=w)
+        perm_rev = _argsort_desc(keys=keys[::-1], chunk=chunk, w=w,
+                                 schedule=schedule)
         return (n - 1 - perm_rev)[::-1].astype(jnp.int32)
-    return _argsort_desc(keys=jnp.asarray(keys), chunk=chunk, w=w)
+    return _argsort_desc(keys=jnp.asarray(keys), chunk=chunk, w=w,
+                         schedule=schedule)
 
 
-def _argsort_desc(keys: jnp.ndarray, chunk: int, w: int) -> jnp.ndarray:
+def _argsort_desc(keys: jnp.ndarray, chunk: int, w: int,
+                  schedule=None) -> jnp.ndarray:
+    from repro.engine.schedule import (default_interpret, reduce_rows,
+                                       schedule_or)
     n = keys.shape[0]
     chunk = min(chunk, _next_pow2(n))
     w = min(w, chunk)
@@ -78,19 +83,12 @@ def _argsort_desc(keys: jnp.ndarray, chunk: int, w: int) -> jnp.ndarray:
     # chunk-local stable sort over (key, rank) lanes
     rows = {KEY: kp.reshape(-1, chunk), RANK: idx.reshape(-1, chunk)}
     rows = bitonic_sort(rows, compare=stable_compare)
-
-    def merge_pair(ka, ra, kb, rb):
-        # adjacent chunks: every A-rank < every B-rank, so stable_compare's
-        # rank tiebreak reproduces algorithm 3's (src, order) priority.
-        out = merge_lanes({KEY: ka, RANK: ra}, {KEY: kb, RANK: rb}, w=w,
-                          compare=stable_compare)
-        return out[KEY], out[RANK]
-
-    merge = jax.vmap(merge_pair)
-    k2, i2 = rows[KEY], rows[RANK]
-    while k2.shape[0] > 1:
-        k2, i2 = merge(k2[0::2], i2[0::2], k2[1::2], i2[1::2])
-    return i2[0, :n]
+    # chunk tree: ranks rise with input position, so stable_compare's rank
+    # tiebreak reproduces algorithm 3's (src, order) priority at every node.
+    _, perm = reduce_rows(rows[KEY], ranks=rows[RANK],
+                          schedule=schedule_or(schedule, w),
+                          interpret=default_interpret())
+    return perm[:n]
 
 
 def flims_sort_kv(keys: jnp.ndarray, values: jnp.ndarray, *,

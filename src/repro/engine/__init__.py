@@ -5,20 +5,22 @@ The single production entry point for sorting workloads (DESIGN.md §3):
 ``segment_sort`` / ``segment_merge`` over ragged batches, all planned by an
 autotunable variant/parameter cache.
 """
-from repro.engine.api import (Plan, argsort, autotune, clear_plans,
-                              load_plans, merge, save_plans, segment_argsort,
-                              segment_merge, segment_sort, sort, topk)
+from repro.engine.api import (MergeSchedule, Plan, argsort, autotune,
+                              clear_plans, load_plans, merge, merge_runs,
+                              save_plans, segment_argsort, segment_merge,
+                              segment_sort, sort, topk)
 from repro.engine.planner import (Planner, default_planner, heuristic_plan,
                                   plan_key)
 from repro.engine.segments import (lengths_from_offsets, offsets_from_lengths,
                                    pad_segments, segment_ids,
                                    segment_sort_oracle, unpad_segments)
-from repro.engine import registry
+from repro.engine import registry, schedule
 
 __all__ = [
-    "Plan", "Planner", "argsort", "autotune", "clear_plans", "default_planner",
-    "heuristic_plan", "lengths_from_offsets", "load_plans", "merge",
-    "offsets_from_lengths", "pad_segments", "plan_key", "registry",
-    "save_plans", "segment_argsort", "segment_ids", "segment_merge",
-    "segment_sort", "segment_sort_oracle", "sort", "topk", "unpad_segments",
+    "MergeSchedule", "Plan", "Planner", "argsort", "autotune", "clear_plans",
+    "default_planner", "heuristic_plan", "lengths_from_offsets", "load_plans",
+    "merge", "merge_runs", "offsets_from_lengths", "pad_segments", "plan_key",
+    "registry", "save_plans", "schedule", "segment_argsort", "segment_ids",
+    "segment_merge", "segment_sort", "segment_sort_oracle", "sort", "topk",
+    "unpad_segments",
 ]

@@ -21,6 +21,7 @@ and ``argsort`` / ``segment_argsort`` return the stable permutation itself.
     v, i  = engine.topk(logits, 16)
     s     = engine.segment_sort(values, offsets) # ragged batch, one kernel
     perm  = engine.segment_argsort(keys, offsets)  # local stable perms
+    m     = engine.merge_runs(keys, run_offsets)   # K sorted runs -> one
     plan  = engine.autotune("segment_sort", values, offsets)
     engine.save_plans("plans.json")
 """
@@ -34,16 +35,13 @@ import jax.numpy as jnp
 from repro.engine import registry, segments
 from repro.engine.planner import (Plan, default_planner, plan_key,
                                   heuristic_plan)
+from repro.engine.schedule import MergeSchedule, default_interpret as _interpret
 
 __all__ = [
     "sort", "argsort", "merge", "topk", "segment_sort", "segment_merge",
-    "segment_argsort", "autotune", "save_plans", "load_plans", "clear_plans",
-    "Plan",
+    "segment_argsort", "merge_runs", "autotune", "save_plans", "load_plans",
+    "clear_plans", "Plan", "MergeSchedule",
 ]
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def infer_key(op: str, *args):
@@ -54,7 +52,7 @@ def infer_key(op: str, *args):
     if op in ("sort", "argsort", "topk"):
         x = args[0]
         return plan_key(op, n=x.shape[-1], dtype=x.dtype)
-    if op in ("segment_sort", "segment_argsort"):
+    if op in ("segment_sort", "segment_argsort", "merge_runs"):
         values, offsets = args[:2]
         return plan_key(op, n=values.shape[0], dtype=values.dtype,
                         segments=offsets.shape[0] - 1)
@@ -84,7 +82,7 @@ def run_op(op: str, plan: Plan, *args):
                  if op == "segment_merge" else args[0].shape[0])
         plan = plan.replace(cap=segments.static_cap(args[1], total))
     kw = {"plan": plan, "interpret": _interpret()}
-    if op in ("argsort", "segment_argsort"):
+    if op in ("argsort", "segment_argsort", "merge_runs"):
         kw["descending"] = True
     return registry.get(op, plan.variant)(*args, **kw)
 
@@ -130,20 +128,32 @@ def argsort(keys, *, descending: bool = True, plan: Optional[Plan] = None,
 
 
 def merge(a, b, *, descending: bool = True, values=None,
-          stable: bool = False, plan: Optional[Plan] = None,
-          variant: Optional[str] = None):
+          stable: bool = False, tie: Optional[str] = None,
+          plan: Optional[Plan] = None, variant: Optional[str] = None):
     """Merge two sorted 1-D arrays into one sorted array.
 
     ``values=(vals_a, vals_b)`` carries payload pytrees through the merge
     and returns ``(merged_keys, merged_values)``; with ``stable=True`` (or
     any payload) ties order A-first then by input position (algorithm 3) —
     via rank lanes in the Pallas kernel, natively in the lane formulations.
+
+    ``tie='skew'`` applies the paper's §4.1 skewness optimisation (the
+    oscillating dir bit, algorithm 2) on the key-only path: same merged
+    keys, balanced dequeue rates. Honoured by the 'ref'/'banked' dataflow
+    variants; the partitioned Pallas kernel's key output is tie-invariant,
+    so it ignores the policy. ``tie=None`` (default) inherits the plan's
+    policy. Incompatible with ``stable``/``values``.
     """
     if values is not None or stable:
+        assert tie != "skew", \
+            "tie='skew' is key-only (stable order has no ties)"
         return _merge_kv(a, b, values, descending, plan, variant)
     if not descending:
-        return merge(a[::-1], b[::-1], plan=plan, variant=variant)[::-1]
+        return merge(a[::-1], b[::-1], tie=tie, plan=plan,
+                     variant=variant)[::-1]
     plan = _resolve("merge", plan, variant, a, b)
+    if tie is not None and tie != plan.tie:
+        plan = plan.replace(tie=tie)
     return registry.get("merge", plan.variant)(a, b, plan=plan,
                                                interpret=_interpret())
 
@@ -263,6 +273,49 @@ def segment_argsort(keys, offsets, *, descending: bool = True, cap: int = 0,
     return registry.get("segment_argsort", plan.variant)(
         keys, offsets, plan=plan, descending=descending,
         interpret=_interpret())
+
+
+def merge_runs(keys, run_offsets, *, descending: bool = True, values=None,
+               stable: bool = False, tie: Optional[str] = None, cap: int = 0,
+               plan: Optional[Plan] = None, variant: Optional[str] = None):
+    """Merge K sorted runs into one sorted array (the paper's §2.1 merge
+    tree as an engine op).
+
+    ``keys`` is the flat concatenation of K runs — each sorted in the call's
+    direction, ragged lengths and empty runs fine — with boundaries
+    ``run_offsets`` ((K+1,), ``run_offsets[0] == 0``,
+    ``run_offsets[-1] == len(keys)``). The resolved plan names a
+    MergeSchedule executor (``xla`` | ``tree_vmapped`` | ``tree_pallas``)
+    and, for the Pallas tree, how many levels each fused pass executes
+    (``plan.levels``; DESIGN.md §5).
+
+    ``values=`` carries a payload pytree of ``keys``-shaped leaves and
+    returns ``(merged_keys, merged_values)``; with ``stable=True`` (or any
+    payload) equal keys keep run-then-position order (algorithm 3) via rank
+    lanes. ``tie='skew'`` applies algorithm 2's selector on the key-only
+    vmapped tree (``None`` inherits the plan's policy). ``cap`` is unused
+    today and reserved for parity with the segmented ops.
+    """
+    del cap
+    segments.validate_offsets(run_offsets, keys.shape[0])
+    run_offsets = jnp.asarray(run_offsets, jnp.int32)
+    plan = _resolve("merge_runs", plan, variant, keys, run_offsets)
+    if tie is not None and tie != plan.tie:
+        plan = plan.replace(tie=tie)
+    if values is None and not stable:
+        return registry.get("merge_runs", plan.variant)(
+            keys, run_offsets, plan=plan, descending=descending,
+            interpret=_interpret())
+    assert tie != "skew", "tie='skew' is key-only (stable order has no ties)"
+    from repro.engine.schedule import merge_runs as _sched_merge_runs
+    # rank lanes leave no ties for skew to balance: pin the stable policy
+    sched = MergeSchedule.from_plan(plan).replace(tie="b")
+    ranks = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    mk, mr = _sched_merge_runs(keys, run_offsets, ranks=ranks, schedule=sched,
+                               descending=descending, interpret=_interpret())
+    if values is None:
+        return mk
+    return mk, jax.tree.map(lambda v: v[mr], values)
 
 
 def segment_merge(a, a_offsets, b, b_offsets, *, descending: bool = True,

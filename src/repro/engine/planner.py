@@ -39,6 +39,8 @@ class Plan:
     block_out: int = 1024
     chunk: int = 256
     cap: int = 0           # per-segment capacity; 0 = derive from shape
+    levels: int = 1        # tree levels fused per pass (MergeSchedule)
+    tie: str = "b"         # selector tie policy: 'b' (alg.1) | 'skew' (alg.2)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -88,14 +90,20 @@ def heuristic_plan(op: str, key: Key) -> Plan:
         table = {"sort": "pallas", "merge": "pallas", "argsort": "pallas",
                  "topk": "flims", "segment_merge": "pallas",
                  "segment_sort": "pallas_two_phase",
-                 "segment_argsort": "pallas_two_phase"}
+                 "segment_argsort": "pallas_two_phase",
+                 "merge_runs": "tree_pallas"}
+        # fuse two tree levels per pass by default on the real hardware
+        levels = 2 if op == "merge_runs" else 1
     else:
         # CPU/GPU interpret-mode kernels are for correctness, not speed:
         # serve the hot path from XLA, keep merge on the banked dataflow.
         table = {"sort": "xla", "merge": "banked", "argsort": "xla",
                  "topk": "xla", "segment_merge": "xla",
-                 "segment_sort": "xla", "segment_argsort": "xla"}
-    return Plan(variant=table[op], w=w, block_out=block_out, chunk=256)
+                 "segment_sort": "xla", "segment_argsort": "xla",
+                 "merge_runs": "xla"}
+        levels = 1
+    return Plan(variant=table[op], w=w, block_out=block_out, chunk=256,
+                levels=levels)
 
 
 # --------------------------------------------------------------------------
@@ -195,7 +203,14 @@ def candidate_plans(op: str, key: Key):
     _, _, _, n, _ = key
     out = []
     for variant in registry.variants(op):
-        if op in ("merge", "segment_merge"):
+        if op == "merge_runs":
+            # the MergeSchedule grid: fused-pass depth is the key dof
+            if variant == "tree_pallas":
+                out.extend(Plan(variant, w=32, levels=lv)
+                           for lv in (1, 2, 3))
+            else:
+                out.append(Plan(variant, w=32))
+        elif op in ("merge", "segment_merge"):
             for w in (32, 128):
                 for block_out in (1024, 4096):
                     out.append(Plan(variant, w=min(w, max(8, n)),
@@ -203,6 +218,9 @@ def candidate_plans(op: str, key: Key):
         elif op in ("sort", "argsort", "segment_sort", "segment_argsort"):
             for chunk in (256, 512):
                 out.append(Plan(variant, w=32, chunk=chunk))
+            if variant.endswith("two_phase"):
+                # phase 2 is a MergeSchedule: also sweep the fused depth
+                out.append(Plan(variant, w=32, chunk=256, levels=2))
         else:
             out.append(Plan(variant))
     return out

@@ -52,13 +52,13 @@ def ops():
 @register("merge", "ref")
 def _merge_ref(a, b, *, plan, interpret):
     from repro.core.flims import flims_merge_ref
-    return flims_merge_ref(a, b, plan.w)
+    return flims_merge_ref(a, b, plan.w, tie=plan.tie)
 
 
 @register("merge", "banked")
 def _merge_banked(a, b, *, plan, interpret):
     from repro.core.flims import flims_merge_banked
-    return flims_merge_banked(a, b, plan.w)
+    return flims_merge_banked(a, b, plan.w, tie=plan.tie)
 
 
 @register("merge", "pallas")
@@ -172,7 +172,7 @@ def _segment_sort_two_phase(values, offsets, *, plan, interpret):
     from repro.kernels.segmented_merge import segment_sort_two_phase
     return segment_sort_two_phase(values, offsets, cap=plan.cap,
                                   chunk=min(plan.chunk, plan.cap), w=plan.w,
-                                  interpret=interpret)
+                                  levels=plan.levels, interpret=interpret)
 
 
 @register("segment_sort", "xla")
@@ -198,7 +198,7 @@ def _segment_argsort_two_phase(keys, offsets, *, plan, descending, interpret):
     return segment_argsort_two_phase(keys, offsets, cap=plan.cap,
                                      chunk=min(plan.chunk, plan.cap),
                                      w=plan.w, descending=descending,
-                                     interpret=interpret)
+                                     levels=plan.levels, interpret=interpret)
 
 
 @register("segment_argsort", "xla")
@@ -206,3 +206,21 @@ def _segment_argsort_xla(keys, offsets, *, plan, descending, interpret):
     from repro.engine.segments import segment_argsort_ref
     return segment_argsort_ref(keys, offsets, cap=plan.cap,
                                descending=descending)
+
+
+# --------------------------------------------------------------------------
+# merge_runs: K sorted runs (ragged, contiguous) reduce to one — the
+# MergeSchedule executors behind one op (DESIGN.md §5)
+# --------------------------------------------------------------------------
+
+def _merge_runs_with(variant):
+    def fn(keys, offsets, *, plan, descending, interpret):
+        from repro.engine.schedule import MergeSchedule, merge_runs
+        sched = MergeSchedule.from_plan(plan, variant=variant)
+        return merge_runs(keys, offsets, schedule=sched,
+                          descending=descending, interpret=interpret)
+    return fn
+
+
+for _v in ("xla", "tree_vmapped", "tree_pallas"):
+    register("merge_runs", _v)(_merge_runs_with(_v))

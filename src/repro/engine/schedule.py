@@ -1,0 +1,351 @@
+"""Merge schedules: ONE description of how K sorted runs reduce to one.
+
+Every multi-pass merge in the repo — ``flims_sort``'s chunk tree,
+``pmt_merge``'s PMT reduction, the two-phase segmented sort's merge passes,
+``sample_sort``'s local K-way reduction, and the public
+``engine.merge_runs`` — used to carry its own private level loop. A
+``MergeSchedule`` replaces them all: a plan-cached, autotunable value object
+naming the executor (``xla`` | ``tree_vmapped`` | ``tree_pallas``), how many
+tree levels each fused pass executes (``levels_per_pass``), the FLiMS tile
+parameters (``w``, ``block_out``) and the tie policy (``'b'`` | ``'skew'``,
+paper §4.1 — key-only formulations; the stable compound order has no ties).
+
+Executors (DESIGN.md §5):
+
+- ``xla``           one shot: per-group lexicographic sort (rank-then-key
+                    double stable argsort) — the planner's CPU/GPU default.
+- ``tree_vmapped``  the classic per-level scheme: one vmapped FLiMS lane
+                    merge per tree level (each level a full HBM round trip).
+- ``tree_pallas``   batched Pallas passes: ``levels_per_pass == 1`` runs the
+                    segmented pair-merge kernel per level;
+                    ``levels_per_pass >= 2`` runs ``kernels/merge_tree`` —
+                    multiple tree levels fused into one ``pallas_call`` with
+                    the intermediate runs resident in kernel scratch.
+
+The flat calling convention is *grouped contiguous runs*: a flat buffer of
+``R = n_groups * runs_per_group`` descending (or ascending, see below) runs
+described by an ``(R+1,)`` offsets vector, consecutive ``runs_per_group``
+runs forming one independent reduction. ``engine.merge_runs`` is the
+single-group case; the two-phase segment sort is the many-group case.
+
+Stability and direction: with ``ranks=`` every executor orders ties by the
+compound ``(key, rank asc)`` order (paper algorithm 3) bit-for-bit. The
+Pallas executors sort ascending natively (static direction flag); the
+vmapped lane executor mirrors — runs are reversed per segment and ranks
+negated around ``INVALID_RANK - 1`` so the descending compound merge of the
+mirror IS the ascending compound merge reversed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flims import next_pow2 as _next_pow2
+from repro.core.lanes import (INVALID_RANK, KEY, RANK, merge_lanes,
+                              stable_compare)
+from repro.engine import segments
+from repro.kernels.flims_merge import bound_keys
+
+#: mirror pivot for the ascending rank trick (INVALID_RANK stays padding)
+_RANK_MIRROR = INVALID_RANK - 1
+
+_VARIANTS = ("xla", "tree_vmapped", "tree_pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeSchedule:
+    """How K sorted runs become one: executor + fused-pass shape + tiles."""
+    variant: str = "tree_vmapped"
+    levels_per_pass: int = 1
+    w: int = 32
+    block_out: int = 1024
+    tie: str = "b"
+
+    def __post_init__(self):
+        assert self.variant in _VARIANTS, self.variant
+        assert self.levels_per_pass >= 1
+        assert self.tie in ("b", "skew")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MergeSchedule":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+    @classmethod
+    def from_plan(cls, plan, variant: Optional[str] = None) -> "MergeSchedule":
+        """Lift an engine ``Plan`` (which carries ``levels``/``tie`` since
+        PR 3) into a MergeSchedule; ``variant`` overrides the plan's."""
+        v = variant or plan.variant
+        if v not in _VARIANTS:
+            v = "tree_vmapped"
+        return cls(variant=v, levels_per_pass=getattr(plan, "levels", 1),
+                   w=plan.w, block_out=plan.block_out,
+                   tie=getattr(plan, "tie", "b"))
+
+    def replace(self, **kw) -> "MergeSchedule":
+        return dataclasses.replace(self, **kw)
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _uniform_len(offsets) -> Optional[int]:
+    """Static per-run length when offsets are concrete and uniform."""
+    import numpy as np
+    if not segments.is_concrete(offsets):
+        return None
+    lens = np.diff(np.asarray(offsets))
+    if lens.size and (lens == lens[0]).all() and int(lens[0]) > 0:
+        return int(lens[0])
+    return None
+
+
+def default_interpret() -> bool:
+    """Pallas kernels interpret everywhere but on a real TPU backend — the
+    one backend predicate the schedule consumers share."""
+    return jax.default_backend() != "tpu"
+
+
+def schedule_or(schedule: Optional[MergeSchedule], w: int,
+                tie: str = "b") -> MergeSchedule:
+    """The consumers' default: the classic per-level vmapped tree at ``w``."""
+    if schedule is not None:
+        return schedule
+    return MergeSchedule("tree_vmapped", w=w, tie=tie)
+
+
+def _mirror(keys, offsets, ranks):
+    """Reverse every run and flip rank priorities: the descending compound
+    merge of the mirror, un-mirrored per group, is the ascending compound
+    merge."""
+    n = keys.shape[0]
+    rev_k = segments.reverse_segments(keys, offsets, n)
+    if ranks is None:
+        return rev_k, None
+    rev_r = segments.reverse_segments(_RANK_MIRROR - ranks, offsets, n)
+    return rev_k, rev_r
+
+
+def _unmirror(keys, ranks, group_offsets):
+    """Undo ``_mirror`` on the merged output: each GROUP's descending
+    sequence reverses in place (group order itself must not flip)."""
+    n = keys.shape[0]
+    k = segments.reverse_segments(keys, group_offsets, n)
+    if ranks is None:
+        return k
+    return k, segments.reverse_segments(_RANK_MIRROR - ranks, group_offsets,
+                                        n)
+
+
+def _pad_group_runs(offsets, m: int, m2: int):
+    """Extend each group's ``m`` contiguous runs with ``m2 - m`` empty runs
+    (start = group end, len = 0). Returns flat (R2,) starts and lens."""
+    starts = offsets[:-1].reshape(-1, m)
+    lens = jnp.diff(offsets).reshape(-1, m)
+    gend = offsets[m::m].reshape(-1, 1)            # end offset of each group
+    pad_s = jnp.broadcast_to(gend, (starts.shape[0], m2 - m))
+    starts = jnp.concatenate([starts, pad_s], axis=1).reshape(-1)
+    lens = jnp.concatenate(
+        [lens, jnp.zeros((lens.shape[0], m2 - m), lens.dtype)],
+        axis=1).reshape(-1)
+    return starts.astype(jnp.int32), lens.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# executors (all descending; direction is normalised by merge_runs)
+# --------------------------------------------------------------------------
+
+def _xla_reduce(keys, offsets, ranks, m: int, descending: bool):
+    """One-shot per-group sort. Key-only: a directional segment sort. KV:
+    the lexicographic double-stable-argsort — order rows by rank, then
+    stably by key — so ties land in rank order for ANY rank assignment."""
+    from repro.kernels.segmented_merge import padded_bank, unpad_bank
+    n = keys.shape[0]
+    goff = offsets[::m]
+    cap = segments.static_cap(goff, n)
+    _, last_k = bound_keys(keys.dtype, descending)
+    kb = padded_bank(keys, goff, cap, fill=last_k)
+    if ranks is None:
+        out = jnp.sort(kb, axis=-1, descending=descending)
+        return unpad_bank(out, goff, n)
+    rb = padded_bank(ranks, goff, cap, fill=INVALID_RANK)
+    p1 = jnp.argsort(rb, axis=-1, stable=True)
+    kb1 = jnp.take_along_axis(kb, p1, axis=-1)
+    p2 = jnp.argsort(kb1, axis=-1, stable=True, descending=descending)
+    perm = jnp.take_along_axis(p1, p2, axis=-1)
+    return (unpad_bank(jnp.take_along_axis(kb, perm, axis=-1), goff, n),
+            unpad_bank(jnp.take_along_axis(rb, perm, axis=-1), goff, n))
+
+
+def _vmapped_reduce(keys, offsets, ranks, m: int, sched: MergeSchedule):
+    """The per-level tree: one vmapped FLiMS lane merge per level (descending
+    only — ``merge_runs`` mirrors ascending calls into this form)."""
+    from repro.core.flims import flims_merge_ref, sentinel_for
+    n = keys.shape[0]
+    K = offsets.shape[0] - 1
+    n_groups = K // m
+    ulen = _uniform_len(offsets)
+    if ulen is not None:
+        krows = keys.reshape(K, ulen)
+        rrows = None if ranks is None else ranks.reshape(K, ulen)
+    else:
+        from repro.kernels.segmented_merge import padded_bank
+        cap = segments.static_cap(offsets, n)
+        krows = padded_bank(keys, offsets, cap)
+        rrows = None if ranks is None else padded_bank(ranks, offsets, cap,
+                                                       fill=INVALID_RANK)
+    m2 = _next_pow2(m)
+    if m2 != m:                      # sentinel runs complete each group
+        cap = krows.shape[1]
+        pad = jnp.full((n_groups, m2 - m, cap), sentinel_for(keys.dtype),
+                       keys.dtype)
+        krows = jnp.concatenate([krows.reshape(n_groups, m, cap), pad],
+                                axis=1).reshape(n_groups * m2, cap)
+        if rrows is not None:
+            rpad = jnp.full((n_groups, m2 - m, cap), INVALID_RANK, jnp.int32)
+            rrows = jnp.concatenate([rrows.reshape(n_groups, m, cap), rpad],
+                                    axis=1).reshape(n_groups * m2, cap)
+    if rrows is None:
+        merge = jax.vmap(
+            lambda a, b: flims_merge_ref(a, b, sched.w, tie=sched.tie))
+        while krows.shape[0] > n_groups:
+            krows = merge(krows[0::2], krows[1::2])
+    else:
+        def merge_kv(ka, ra, kb, rb):
+            out = merge_lanes({KEY: ka, RANK: ra}, {KEY: kb, RANK: rb},
+                              w=sched.w, compare=stable_compare)
+            return out[KEY], out[RANK]
+        merge = jax.vmap(merge_kv)
+        while krows.shape[0] > n_groups:
+            krows, rrows = merge(krows[0::2], rrows[0::2],
+                                 krows[1::2], rrows[1::2])
+    # gather each group's valid prefix back to the flat layout
+    from repro.kernels.segmented_merge import unpad_bank
+    glen = jnp.diff(offsets).reshape(n_groups, m).sum(axis=1)
+    goff = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(glen)]).astype(jnp.int32)
+    krows = krows.reshape(n_groups, -1)
+    if rrows is None:
+        return unpad_bank(krows, goff, n)
+    return (unpad_bank(krows, goff, n),
+            unpad_bank(rrows.reshape(n_groups, -1), goff, n))
+
+
+def _pallas_reduce(keys, offsets, ranks, m: int, sched: MergeSchedule,
+                   descending: bool, interpret: bool):
+    """Fused-pass tree: each pass collapses ``2^levels_per_pass`` runs per
+    group in one ``pallas_call`` (the segmented pair kernel at one level,
+    the merge-tree kernel at two or more)."""
+    from repro.kernels.merge_tree import merge_tree_runs, merge_tree_runs_kv
+    from repro.kernels.segmented_merge import (segmented_merge_runs,
+                                               segmented_merge_runs_kv)
+    n = keys.shape[0]
+    m2 = _next_pow2(m)
+    starts, lens = _pad_group_runs(offsets, m, m2)
+    buf, rbuf = keys, ranks
+    while m2 > 1:
+        Lp = min(sched.levels_per_pass, m2.bit_length() - 1)
+        # clamp the block to this pass's per-group output so the padded
+        # (G, C) block buffer stays O(n) even with many runs per pass
+        groups = max(starts.shape[0] >> Lp, 1)
+        bo = max(sched.w, min(sched.block_out, _next_pow2(-(-n // groups))))
+        if Lp == 1:
+            if rbuf is None:
+                buf = segmented_merge_runs(
+                    buf, buf, starts[0::2], lens[0::2], starts[1::2],
+                    lens[1::2], n_out=n, w=sched.w, block_out=bo,
+                    interpret=interpret)
+            else:
+                buf, rbuf = segmented_merge_runs_kv(
+                    buf, rbuf, buf, rbuf, starts[0::2], lens[0::2],
+                    starts[1::2], lens[1::2], n_out=n, w=sched.w,
+                    block_out=bo, descending=descending,
+                    interpret=interpret)
+        else:
+            if rbuf is None:
+                buf = merge_tree_runs(
+                    buf, starts, lens, group=1 << Lp, n_out=n, w=sched.w,
+                    block_out=bo, interpret=interpret)
+            else:
+                buf, rbuf = merge_tree_runs_kv(
+                    buf, rbuf, starts, lens, group=1 << Lp, n_out=n,
+                    w=sched.w, block_out=bo, descending=descending,
+                    interpret=interpret)
+        lens = lens.reshape(-1, 1 << Lp).sum(axis=1).astype(jnp.int32)
+        starts = jnp.concatenate(
+            [jnp.zeros((1,), jnp.int32),
+             jnp.cumsum(lens)[:-1]]).astype(jnp.int32)
+        m2 >>= Lp
+    return buf if rbuf is None else (buf, rbuf)
+
+
+# --------------------------------------------------------------------------
+# the one entry point every former tree loop compiles to
+# --------------------------------------------------------------------------
+
+def merge_runs(keys, offsets, *, ranks=None, schedule: MergeSchedule,
+               runs_per_group: Optional[int] = None, descending: bool = True,
+               interpret: bool = True):
+    """Reduce grouped contiguous sorted runs to one sorted run per group.
+
+    ``keys`` is the flat concatenation of ``R`` runs with boundaries
+    ``offsets`` ((R+1,)); each run is sorted in the call's direction, empty
+    runs are fine, and consecutive ``runs_per_group`` runs (default: all R)
+    reduce independently. Returns the flat merged groups in group order.
+    With ``ranks=`` (int32, any priority assignment) the reduction is the
+    stable compound-order merge and returns ``(keys, ranks)``.
+    """
+    offsets = jnp.asarray(offsets, jnp.int32)
+    K = offsets.shape[0] - 1
+    m = runs_per_group or max(K, 1)
+    assert K % max(m, 1) == 0, "run count must divide into equal groups"
+    n = keys.shape[0]
+    if ranks is not None:
+        ranks = jnp.asarray(ranks, jnp.int32)
+    if K <= 1 or m == 1 or n == 0:
+        return keys if ranks is None else (keys, ranks)
+
+    sched = schedule
+    if not descending:
+        if sched.variant == "xla":
+            pass                              # sorts ascending natively
+        elif sched.variant == "tree_pallas" and ranks is not None:
+            pass                              # static direction flag
+        else:
+            keys, ranks = _mirror(keys, offsets, ranks)
+            out = merge_runs(keys, offsets, ranks=ranks, schedule=sched,
+                             runs_per_group=m, descending=True,
+                             interpret=interpret)
+            goff = offsets[::m]               # group boundaries survive
+            return (_unmirror(out, None, goff) if ranks is None
+                    else _unmirror(out[0], out[1], goff))
+
+    if sched.variant == "xla":
+        return _xla_reduce(keys, offsets, ranks, m, descending)
+    if sched.variant == "tree_vmapped":
+        return _vmapped_reduce(keys, offsets, ranks, m, sched)
+    return _pallas_reduce(keys, offsets, ranks, m, sched, descending,
+                          interpret)
+
+
+def reduce_rows(rows, *, schedule: MergeSchedule, ranks=None,
+                runs_per_group: Optional[int] = None, descending: bool = True,
+                interpret: bool = True):
+    """Uniform-rows convenience form: merge the K rows of a ``(K, n)`` bank
+    (each a sorted run) per group of ``runs_per_group`` consecutive rows.
+    The PMT / flims_sort / sample-sort shape — rows are already banked, so
+    no repacking gather is needed on the vmapped path. Returns the flat
+    merged groups (and ranks, when given)."""
+    K, n = rows.shape
+    offsets = jnp.arange(K + 1, dtype=jnp.int32) * n
+    return merge_runs(rows.reshape(-1), offsets,
+                      ranks=None if ranks is None else ranks.reshape(-1),
+                      schedule=schedule, runs_per_group=runs_per_group,
+                      descending=descending, interpret=interpret)

@@ -14,8 +14,7 @@ import jax.numpy as jnp
 from repro.core.flims import sentinel_for
 from repro.core.lanes import INVALID_RANK
 from repro.kernels.bitonic_sort import sort_chunks_kv_pallas, sort_chunks_pallas
-from repro.kernels.flims_merge import bound_keys, flims_merge_kv_pallas, \
-    flims_merge_pallas
+from repro.kernels.flims_merge import bound_keys, flims_merge_pallas
 
 
 def _on_tpu() -> bool:
@@ -35,10 +34,17 @@ def sort_rows(x: jnp.ndarray, *, rows_per_block: int = 8) -> jnp.ndarray:
                               interpret=not _on_tpu())
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "w", "descending"))
+@functools.partial(jax.jit, static_argnames=("chunk", "w", "descending",
+                                             "levels"))
 def kernel_sort(x: jnp.ndarray, *, chunk: int = 512, w: int = 128,
-                descending: bool = True) -> jnp.ndarray:
-    """Full sort of a 1-D array: chunk kernel + FLiMS merge kernel passes."""
+                descending: bool = True, levels: int = 2) -> jnp.ndarray:
+    """Full sort of a 1-D array: chunk kernel + fused FLiMS merge-tree passes.
+
+    The merge phase executes a ``tree_pallas`` MergeSchedule (DESIGN.md §5):
+    each pass collapses ``levels`` tree levels in one ``pallas_call``, with
+    the intermediate runs resident in kernel scratch instead of HBM.
+    """
+    from repro.engine.schedule import MergeSchedule, reduce_rows
     n = x.shape[0]
     if n <= 1:
         return x
@@ -54,29 +60,30 @@ def kernel_sort(x: jnp.ndarray, *, chunk: int = 512, w: int = 128,
     n_pad = m2 * c
     xp = jnp.pad(x, (0, n_pad - n), constant_values=sentinel_for(x.dtype))
     rows = sort_rows(xp.reshape(-1, c))
-    interp = not _on_tpu()
     ww = min(w, c)
-    merge2 = jax.vmap(lambda u, v: flims_merge_pallas(
-        u, v, w=ww, block_out=max(ww, 4096), interpret=interp))
-    while rows.shape[0] > 1:
-        rows = merge2(rows[0::2], rows[1::2])
-    out = rows[0, :n]
+    sched = MergeSchedule("tree_pallas", levels_per_pass=levels, w=ww,
+                          block_out=max(ww, 4096))
+    merged = reduce_rows(rows, schedule=sched, interpret=not _on_tpu())
+    out = merged[:n]
     return out if descending else out[::-1]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "w", "descending",
-                                             "interpret"))
+                                             "interpret", "levels"))
 def kernel_argsort(keys: jnp.ndarray, *, chunk: int = 256, w: int = 32,
-                   descending: bool = True,
-                   interpret: bool = None) -> jnp.ndarray:
+                   descending: bool = True, interpret: bool = None,
+                   levels: int = 2) -> jnp.ndarray:
     """Stable argsort of a 1-D array, entirely in Pallas KV kernels.
 
     The two-level sorter of ``kernel_sort`` over (key, rank) lanes: one KV
-    chunk-sort ``pallas_call``, then partitioned KV FLiMS merge passes. The
-    rank lane (original positions) breaks ties and *is* the result — matches
-    ``jnp.argsort(stable=True)`` bit-for-bit in either direction (ascending
-    is sorted natively by flipping the key comparison, not by mirroring).
+    chunk-sort ``pallas_call``, then fused KV merge-tree passes (a
+    ``tree_pallas`` MergeSchedule carrying the rank lane through every
+    level). The rank lane (original positions) breaks ties and *is* the
+    result — matches ``jnp.argsort(stable=True)`` bit-for-bit in either
+    direction (ascending is sorted natively by flipping the key comparison,
+    not by mirroring).
     """
+    from repro.engine.schedule import MergeSchedule, reduce_rows
     if interpret is None:
         interpret = not _on_tpu()
     n = keys.shape[0]
@@ -96,9 +103,8 @@ def kernel_argsort(keys: jnp.ndarray, *, chunk: int = 256, w: int = 32,
     k2, r2 = sort_chunks_kv_pallas(kp.reshape(-1, c), rp.reshape(-1, c),
                                    descending=descending, interpret=interpret)
     ww = min(w, c)
-    merge2 = jax.vmap(lambda ka, ra, kb, rb: flims_merge_kv_pallas(
-        ka, ra, kb, rb, w=ww, block_out=max(ww, 4096),
-        descending=descending, interpret=interpret))
-    while k2.shape[0] > 1:
-        k2, r2 = merge2(k2[0::2], r2[0::2], k2[1::2], r2[1::2])
-    return r2[0, :n]
+    sched = MergeSchedule("tree_pallas", levels_per_pass=levels, w=ww,
+                          block_out=max(ww, 4096))
+    _, perm = reduce_rows(k2, ranks=r2, schedule=sched,
+                          descending=descending, interpret=interpret)
+    return perm[:n]

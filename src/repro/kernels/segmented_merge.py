@@ -430,17 +430,23 @@ def segment_sort_pallas(values, offsets, *, cap: int = 0,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cap", "chunk", "w", "interpret"))
+                   static_argnames=("cap", "chunk", "w", "levels",
+                                    "interpret"))
 def segment_sort_two_phase(values, offsets, *, cap: int, chunk: int = 256,
-                           w: int = 32, interpret: bool = True):
+                           w: int = 32, levels: int = 1,
+                           interpret: bool = True):
     """Two-phase segmented sort: one chunk-sort ``pallas_call`` over ALL
-    segments' rows, then log2(cap/chunk) segmented FLiMS merge passes, each
-    one ``pallas_call`` across the whole batch (TopSort-style phase plan).
+    segments' rows, then a ``tree_pallas`` MergeSchedule over the uniform
+    chunk runs (TopSort-style phase plan). With ``levels == 1`` each tree
+    level is one segmented pair-merge ``pallas_call`` across the whole
+    batch; ``levels >= 2`` fuses that many levels per pass through the
+    merge-tree kernel (DESIGN.md §5).
 
     Every segment is padded to the static ``cap`` (power of two ≥ longest
     segment); sentinels ride through the merges and sort last, so the valid
     prefix of each segment is its true descending sort.
     """
+    from repro.engine.schedule import MergeSchedule, merge_runs
     from repro.kernels.bitonic_sort import sort_chunks_pallas
     assert values.ndim == 1 and offsets.ndim == 1
     S = offsets.shape[0] - 1
@@ -457,19 +463,13 @@ def segment_sort_two_phase(values, offsets, *, cap: int, chunk: int = 256,
                               interpret=interpret)
     flat = rows.reshape(S * cap)
 
-    # phase 2: pairwise segmented merge passes over uniform L-runs
-    L = chunk
-    while L < cap:
-        m = cap // (2 * L)                      # run pairs per segment
-        j = jnp.arange(S * m, dtype=jnp.int32)
-        a_starts = (j // m) * cap + (j % m) * 2 * L
-        b_starts = a_starts + L
-        lens_l = jnp.full((S * m,), L, jnp.int32)
-        flat = segmented_merge_runs(
-            flat, flat, a_starts, lens_l, b_starts, lens_l,
-            n_out=S * cap, w=min(w, L), block_out=max(2 * L, w),
-            interpret=interpret)
-        L *= 2
+    # phase 2: reduce each segment's cap/chunk uniform runs per schedule
+    if cap > chunk:
+        run_offs = jnp.arange(S * (cap // chunk) + 1, dtype=jnp.int32) * chunk
+        sched = MergeSchedule("tree_pallas", levels_per_pass=levels,
+                              w=min(w, chunk), block_out=max(2 * chunk, w))
+        flat = merge_runs(flat, run_offs, schedule=sched,
+                          runs_per_group=cap // chunk, interpret=interpret)
 
     i = jnp.arange(N, dtype=jnp.int32)
     s = jnp.clip(jnp.searchsorted(offsets, i, side="right") - 1, 0, S - 1)
@@ -536,15 +536,17 @@ def segment_argsort_pallas(keys, offsets, *, cap: int = 0,
 
 @functools.partial(jax.jit,
                    static_argnames=("cap", "chunk", "w", "descending",
-                                    "interpret"))
+                                    "levels", "interpret"))
 def segment_argsort_two_phase(keys, offsets, *, cap: int, chunk: int = 256,
                               w: int = 32, descending: bool = True,
-                              interpret: bool = True):
+                              levels: int = 1, interpret: bool = True):
     """Two-phase stable per-segment argsort: one KV chunk-sort
-    ``pallas_call`` over ALL segments' rows, then log2(cap/chunk) KV
-    segmented FLiMS merge passes. Mirrors ``segment_sort_two_phase`` with
-    rank lanes; the rank lane of the fully merged bank is the permutation.
+    ``pallas_call`` over ALL segments' rows, then the KV ``tree_pallas``
+    MergeSchedule over the uniform chunk runs (``levels`` tree levels fused
+    per pass). Mirrors ``segment_sort_two_phase`` with rank lanes; the rank
+    lane of the fully merged bank is the permutation.
     """
+    from repro.engine.schedule import MergeSchedule, merge_runs
     assert keys.ndim == 1 and offsets.ndim == 1
     S = offsets.shape[0] - 1
     N = keys.shape[0]
@@ -565,20 +567,16 @@ def segment_argsort_two_phase(keys, offsets, *, cap: int, chunk: int = 256,
     kflat = kr.reshape(S * cap)
     rflat = rr.reshape(S * cap)
 
-    # phase 2: pairwise KV segmented merge passes over uniform L-runs
-    # (earlier chunks hold smaller local ranks, so the compound comparator's
-    # rank tiebreak keeps every pass stable)
-    L = chunk
-    while L < cap:
-        m = cap // (2 * L)
-        j = jnp.arange(S * m, dtype=jnp.int32)
-        a_starts = (j // m) * cap + (j % m) * 2 * L
-        b_starts = a_starts + L
-        lens_l = jnp.full((S * m,), L, jnp.int32)
-        kflat, rflat = segmented_merge_runs_kv(
-            kflat, rflat, kflat, rflat, a_starts, lens_l, b_starts, lens_l,
-            n_out=S * cap, w=min(w, L), block_out=max(2 * L, w),
-            descending=descending, interpret=interpret)
-        L *= 2
+    # phase 2: KV schedule over uniform chunk runs (earlier chunks hold
+    # smaller local ranks, so the compound comparator's rank tiebreak keeps
+    # every fused pass stable)
+    if cap > chunk:
+        run_offs = jnp.arange(S * (cap // chunk) + 1, dtype=jnp.int32) * chunk
+        sched = MergeSchedule("tree_pallas", levels_per_pass=levels,
+                              w=min(w, chunk), block_out=max(2 * chunk, w))
+        kflat, rflat = merge_runs(kflat, run_offs, ranks=rflat,
+                                  schedule=sched,
+                                  runs_per_group=cap // chunk,
+                                  descending=descending, interpret=interpret)
 
     return unpad_bank(rflat.reshape(S, cap), offsets, N)
