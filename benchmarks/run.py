@@ -21,7 +21,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (argsort_bench, fig14_w_sweep, fig15_full_sort,
                             kernel_merge, merge_tree_bench, moe_dispatch,
-                            skew_balance, table2_comparators)
+                            sharded_sort_bench, skew_balance,
+                            table2_comparators)
     sections = [(table2_comparators, "Table 2 (comparator counts)"),
                 (fig14_w_sweep, "Fig 14 (throughput vs w)"),
                 (fig15_full_sort, "Fig 15 (complete sort)"),
@@ -29,7 +30,8 @@ def main(argv=None) -> None:
                 (merge_tree_bench, "S2.1 (parallel merge tree)"),
                 (kernel_merge, "Pallas kernels (interpret)"),
                 (argsort_bench, "Argsort variants (payload lanes)"),
-                (moe_dispatch, "MoE dispatch via repro.engine")]
+                (moe_dispatch, "MoE dispatch via repro.engine"),
+                (sharded_sort_bench, "S8.2 (sharded sample sort, 8 devices)")]
     if args.only:
         keys = [s.strip() for s in args.only.split(",") if s.strip()]
         sections = [(m, l) for m, l in sections

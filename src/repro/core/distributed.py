@@ -5,14 +5,24 @@ all cores, then parallel merge passes. Across a TPU pod the same structure
 becomes a *sample sort*:
 
   1. every device FLiMS-sorts its local shard             (compute-bound)
-  2. regular sampling -> all_gather(P·P samples) -> global splitters
+  2. splitter selection -> (P-1,) global splitters
   3. bucket partition via searchsorted + one all_to_all   (collective-bound)
   4. every device PMT-merges the P sorted runs it received (paper fig. 1)
 
 Output: device p holds the p-th descending value range, i.e. the mesh-order
 concatenation is globally sorted. Buckets are sentinel-padded to a fixed cap
 (collectives need static shapes); `counts` reports true sizes and `overflow`
-flags cap overruns (re-run with a larger cap — the launcher does this).
+flags cap overruns.
+
+Since PR 4 the machinery lives in ``repro.engine.sharded`` (DESIGN.md §6)
+and the overflow contract is honoured *in-graph*: bucket sizes are known
+before the exchange, and a bounded cap-doubling ladder
+(``retries`` rungs toward ``n_local``) selects the smallest cap that fits —
+``overflow=True`` survives only when even the last rung cannot hold the
+largest bucket. ``sample_sort`` here is the paper-facing wrapper with
+regular splitter sampling; production callers should use
+``engine.sharded_sort`` / ``engine.sharded_topk``, which add plan caching,
+autotuning, and skew-robust histogram-refined splitters.
 
 Payload lanes ride the whole pipeline natively: with ``payload=`` (a pytree
 of same-length 1-D arrays) the local sort is the engine's stable KV sort,
@@ -23,129 +33,44 @@ distributed argsort is just ``payload=global_indices``.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import PartitionSpec as P
 
-from repro import engine
-from repro.core.flims import sentinel_for
-from repro.core.merge_tree import pmt_merge, pmt_merge_kv_padded
-from repro.core.mergesort import _next_pow2
+from repro.engine.sharded import ShardedSort, run_sharded_sort
 
-
-class ShardedSort(NamedTuple):
-    values: jnp.ndarray   # (P * cap,) per device, sentinel-padded, descending
-    count: jnp.ndarray    # () valid prefix length per device
-    overflow: jnp.ndarray # () bool: some bucket exceeded the cap
-
-
-def _local_pass(xl: jnp.ndarray, payload, axis_name: str, n_dev: int,
-                cap: int, w: int, merge_schedule=None):
-    n_local = xl.shape[0]
-    # descending local sort through the engine (planner picks the variant;
-    # an explicit plan pins the FLiMS reference dataflow's w). With payload
-    # lanes the stable KV path permutes keys and payload together.
-    if payload is None:
-        loc = engine.sort(xl, plan=engine.Plan("ref", w=w, chunk=512))
-        ploc = None
-    else:
-        # pin the pure-JAX lane argsort: honours w and stays shard_map-safe
-        # (the KV sort routes through the argsort op, so the plan names an
-        # argsort variant)
-        loc, ploc = engine.sort(xl, values=payload, stable=True,
-                                plan=engine.Plan("flims", w=w, chunk=512))
-    # --- splitters from regular sampling -----------------------------------
-    step = max(n_local // n_dev, 1)
-    samples = loc[::step][:n_dev]
-    allsmp = lax.all_gather(samples, axis_name).reshape(-1)      # (P*P,)
-    allsmp = engine.sort(allsmp, plan=engine.Plan(
-        "ref", w=min(w, _next_pow2(allsmp.shape[0])), chunk=512))
-    splitters = allsmp[::n_dev][1:n_dev]                          # (P-1,) desc
-    # --- bucket boundaries: b_p = #elements strictly greater than s_p ------
-    asc = loc[::-1]
-    b = n_local - jnp.searchsorted(asc, splitters, side="left")
-    bounds = jnp.concatenate([jnp.zeros((1,), b.dtype), b,
-                              jnp.full((1,), n_local, b.dtype)])  # (P+1,)
-    sizes = bounds[1:] - bounds[:-1]
-    overflow = jnp.any(sizes > cap)
-    # --- gather each bucket into a fixed-cap row ----------------------------
-    sent = sentinel_for(loc.dtype)
-    pos = bounds[:-1][:, None] + jnp.arange(cap)[None, :]         # (P, cap)
-    valid = jnp.arange(cap)[None, :] < jnp.minimum(sizes, cap)[:, None]
-    src = jnp.clip(pos, 0, n_local - 1)
-    send = jnp.where(valid, loc[src], sent)
-    # --- exchange -----------------------------------------------------------
-    recv = lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0,
-                          tiled=True)                             # (P, cap)
-    cnt = lax.all_to_all(jnp.minimum(sizes, cap), axis_name,
-                         split_axis=0, concat_axis=0, tiled=True)
-    if payload is not None:
-        # payload rows exchange natively beside the keys; validity is
-        # governed by counts, so out-of-range rows need no masking.
-        precv = jax.tree.map(
-            lambda pv: lax.all_to_all(pv[src], axis_name, split_axis=0,
-                                      concat_axis=0, tiled=True), ploc)
-    # --- k-way FLiMS merge of the received runs -----------------------------
-    k_pad = _next_pow2(recv.shape[0])
-    if k_pad != recv.shape[0]:
-        grow = k_pad - recv.shape[0]
-        recv = jnp.concatenate(
-            [recv, jnp.full((grow, cap), sent, loc.dtype)])
-        if payload is not None:
-            precv = jax.tree.map(
-                lambda pv: jnp.concatenate(
-                    [pv, jnp.zeros((grow, cap), pv.dtype)]), precv)
-    any_ovf = lax.pmax(overflow.astype(jnp.int32), axis_name)
-    if payload is None:
-        merged = pmt_merge(recv, w=min(w, _next_pow2(cap)),
-                           schedule=merge_schedule)
-        return ShardedSort(merged, jnp.sum(cnt).reshape(1),
-                           any_ovf.astype(bool).reshape(1))
-    # validity-aware KV merge: padding must sort behind *real* sentinel-
-    # valued keys or its garbage payload would land inside the count prefix
-    cnt_pad = jnp.concatenate(
-        [cnt, jnp.zeros((k_pad - cnt.shape[0],), cnt.dtype)])
-    merged, pmerged = pmt_merge_kv_padded(recv, cnt_pad, precv,
-                                          w=min(w, _next_pow2(cap)),
-                                          schedule=merge_schedule)
-    return (ShardedSort(merged, jnp.sum(cnt).reshape(1),
-                        any_ovf.astype(bool).reshape(1)), pmerged)
+__all__ = ["ShardedSort", "sample_sort"]
 
 
 @partial(jax.jit, static_argnames=("mesh", "axis", "w", "cap_factor",
-                                   "merge_schedule"))
-def sample_sort(x: jnp.ndarray, mesh, axis: str = "data", w: int = 32,
-                cap_factor: int = 4, payload=None, merge_schedule=None):
+                                   "merge_schedule", "retries", "splitter"))
+def sample_sort(x, mesh, axis: str = "data", w: int = 32,
+                cap_factor: int = 4, payload=None, merge_schedule=None,
+                retries: int = 2, splitter: str = "regular"):
     """Sort a 1-D array sharded over ``axis`` of ``mesh``. Descending.
 
-    Returns per-device padded runs; `values` with spec P(axis) concatenates to
-    the global descending order. With ``payload=`` (a pytree of 1-D arrays of
-    ``x``'s length, sharded the same way) returns ``(ShardedSort, payload)``
-    where each payload leaf is the (P*cap,)-per-device array permuted
+    Returns per-device padded runs; `values` with spec P(axis) concatenates
+    to the global descending order. With ``payload=`` (a pytree of 1-D
+    arrays of ``x``'s length, sharded the same way) returns
+    ``(ShardedSort, payload)`` where each payload leaf is permuted
     identically to `values` — keys and payloads exchange natively, and ties
     keep their input order (stable, paper algorithm 3).
 
+    ``cap_factor`` sets the base bucket cap; a bucket that exceeds it no
+    longer truncates — up to ``retries`` in-graph cap doublings recover the
+    overflow before the exchange runs (``retries=0`` restores the old
+    single-shot behaviour and a meaningful ``overflow`` flag).
+
     ``merge_schedule`` (an ``engine.schedule.MergeSchedule``) selects the
     executor of step 4's local K-way reduction — per-level vmapped FLiMS
-    merges by default, or the fused Pallas merge tree.
+    merges by default, or the fused Pallas merge tree. It is lowered into
+    the engine plan (``MergeSchedule.to_plan``); ``engine.sharded_sort``
+    resolves the schedule from the plan cache instead of a kwarg.
     """
-    n_dev = mesh.shape[axis]
-    n_local = x.shape[0] // n_dev
-    cap = min(n_local, cap_factor * max(n_local // n_dev, 1))
-    if payload is None:
-        fn = partial(_local_pass, payload=None, axis_name=axis, n_dev=n_dev,
-                     cap=cap, w=w, merge_schedule=merge_schedule)
-        return jax.shard_map(
-            fn, mesh=mesh, in_specs=P(axis),
-            out_specs=ShardedSort(P(axis), P(axis), P(axis)),
-            check_vma=False)(x)
-    fn = partial(_local_pass, axis_name=axis, n_dev=n_dev, cap=cap, w=w,
-                 merge_schedule=merge_schedule)
-    pspec = jax.tree.map(lambda _: P(axis), payload)
-    return jax.shard_map(
-        fn, mesh=mesh, in_specs=(P(axis), pspec),
-        out_specs=(ShardedSort(P(axis), P(axis), P(axis)), pspec),
-        check_vma=False)(x, payload)
+    from repro.engine.schedule import schedule_or
+    # the caller's w drives the local sort and splitter phases; an explicit
+    # merge_schedule keeps its own tiles for the step-4 reduction
+    plan = schedule_or(merge_schedule, w).to_plan(
+        cap_factor=cap_factor, retries=retries, splitter=splitter).replace(
+        w=w)
+    return run_sharded_sort(x, mesh, axis, payload=payload, plan=plan,
+                            schedule=merge_schedule)

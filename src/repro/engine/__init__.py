@@ -8,19 +8,22 @@ autotunable variant/parameter cache.
 from repro.engine.api import (MergeSchedule, Plan, argsort, autotune,
                               clear_plans, load_plans, merge, merge_runs,
                               save_plans, segment_argsort, segment_merge,
-                              segment_sort, sort, topk)
+                              segment_sort, sharded_sort, sharded_topk,
+                              sort, topk)
 from repro.engine.planner import (Planner, default_planner, heuristic_plan,
                                   plan_key)
 from repro.engine.segments import (lengths_from_offsets, offsets_from_lengths,
                                    pad_segments, segment_ids,
                                    segment_sort_oracle, unpad_segments)
-from repro.engine import registry, schedule
+from repro.engine.sharded import ShardedSort
+from repro.engine import registry, schedule, sharded
 
 __all__ = [
-    "MergeSchedule", "Plan", "Planner", "argsort", "autotune", "clear_plans",
-    "default_planner", "heuristic_plan", "lengths_from_offsets", "load_plans",
-    "merge", "merge_runs", "offsets_from_lengths", "pad_segments", "plan_key",
-    "registry", "save_plans", "schedule", "segment_argsort", "segment_ids",
-    "segment_merge", "segment_sort", "segment_sort_oracle", "sort", "topk",
-    "unpad_segments",
+    "MergeSchedule", "Plan", "Planner", "ShardedSort", "argsort", "autotune",
+    "clear_plans", "default_planner", "heuristic_plan",
+    "lengths_from_offsets", "load_plans", "merge", "merge_runs",
+    "offsets_from_lengths", "pad_segments", "plan_key", "registry",
+    "save_plans", "schedule", "segment_argsort", "segment_ids",
+    "segment_merge", "segment_sort", "segment_sort_oracle", "sharded",
+    "sharded_sort", "sharded_topk", "sort", "topk", "unpad_segments",
 ]

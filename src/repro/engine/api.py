@@ -22,6 +22,8 @@ and ``argsort`` / ``segment_argsort`` return the stable permutation itself.
     s     = engine.segment_sort(values, offsets) # ragged batch, one kernel
     perm  = engine.segment_argsort(keys, offsets)  # local stable perms
     m     = engine.merge_runs(keys, run_offsets)   # K sorted runs -> one
+    res   = engine.sharded_sort(xs, mesh)        # mesh-sharded sample sort
+    v, i  = engine.sharded_topk(xs, 16, mesh)    # global top-k on the mesh
     plan  = engine.autotune("segment_sort", values, offsets)
     engine.save_plans("plans.json")
 """
@@ -39,8 +41,9 @@ from repro.engine.schedule import MergeSchedule, default_interpret as _interpret
 
 __all__ = [
     "sort", "argsort", "merge", "topk", "segment_sort", "segment_merge",
-    "segment_argsort", "merge_runs", "autotune", "save_plans", "load_plans",
-    "clear_plans", "Plan", "MergeSchedule",
+    "segment_argsort", "merge_runs", "sharded_sort", "sharded_topk",
+    "autotune", "save_plans", "load_plans", "clear_plans", "Plan",
+    "MergeSchedule",
 ]
 
 
@@ -60,6 +63,13 @@ def infer_key(op: str, *args):
         a, ao, b, _bo = args[:4]
         return plan_key(op, n=a.shape[0] + b.shape[0], dtype=a.dtype,
                         segments=ao.shape[0] - 1)
+    if op in ("sharded_sort", "sharded_topk"):
+        # keyed by mesh axis + device count P on top of the usual bucket
+        x = args[0]
+        mesh, axis = (args[1], args[2]) if op == "sharded_sort" \
+            else (args[2], args[3])
+        return plan_key(op, n=x.shape[0], dtype=x.dtype,
+                        segments=mesh.shape[axis], axis=str(axis))
     raise ValueError(f"unknown op {op!r}")
 
 
@@ -339,6 +349,57 @@ def segment_merge(a, a_offsets, b, b_offsets, *, descending: bool = True,
                     b_offsets)
     return registry.get("segment_merge", plan.variant)(
         a, a_offsets, b, b_offsets, plan=plan, interpret=_interpret())
+
+
+# --------------------------------------------------------------------------
+# sharded ops: sort / top-k across a device mesh (DESIGN.md §6)
+# --------------------------------------------------------------------------
+
+def sharded_sort(x, mesh, axis: str = "data", *, payload=None,
+                 plan: Optional[Plan] = None, variant: Optional[str] = None):
+    """Sort a 1-D array sharded over ``axis`` of ``mesh``. Descending.
+
+    The planned face of the distributed sample sort: local FLiMS sorts,
+    splitter selection, one all_to_all bucket exchange, and a per-device
+    K-way reduction through the plan's MergeSchedule executor (the
+    ``variant``: ``xla`` | ``tree_vmapped`` | ``tree_pallas``). The plan
+    also carries the sharded degrees of freedom — ``splitter`` (``'hist'``
+    oversampled + exact-rank refined splitters by default; ``'regular'`` for
+    the paper's plain sampling), ``cap_factor``, and ``retries`` rungs of
+    in-graph cap escalation, which make the documented overflow contract
+    hold: a result is only flagged ``overflow=True`` when even the last
+    rung's cap cannot fit the largest bucket. A ladder whose last rung
+    reaches ``n_local`` cannot overflow at all — true whenever
+    ``cap_factor * 2**retries >= n_dev`` (any mesh up to 16 devices on the
+    default plan); on wider meshes raise ``retries`` to keep the guarantee,
+    or read the flag.
+
+    Returns a ``ShardedSort`` of per-device padded runs — ``values`` with
+    spec P(axis) concatenates to the global descending order, ``count`` the
+    valid prefix per device (``parallel.sharding.collect_sorted`` gathers on
+    host). With ``payload=`` (a pytree of 1-D arrays of ``x``'s length,
+    sharded the same way) returns ``(ShardedSort, payload)`` permuted
+    identically and stably (paper algorithm 3).
+    """
+    plan = _resolve("sharded_sort", plan, variant, x, mesh, axis)
+    return registry.get("sharded_sort", plan.variant)(
+        x, mesh, axis, plan=plan, interpret=_interpret(), payload=payload)
+
+
+def sharded_topk(x, k: int, mesh, axis: str = "data", *, payload=None,
+                 plan: Optional[Plan] = None, variant: Optional[str] = None):
+    """(values, global indices) of the k largest elements of a 1-D array
+    sharded over ``axis`` — bit-for-bit ``lax.top_k`` of the gathered array
+    (ties to the lower global index), replicated on every device.
+
+    Local top-k candidates (``variant``: ``'flims'`` selector tree or
+    ``'xla'``) are all_gathered and stable-merged through the plan's
+    schedule. With ``payload=`` returns ``(values, indices, payload_topk)``
+    with the payload riding the lanes end-to-end.
+    """
+    plan = _resolve("sharded_topk", plan, variant, x, k, mesh, axis)
+    return registry.get("sharded_topk", plan.variant)(
+        x, k, mesh, axis, plan=plan, interpret=_interpret(), payload=payload)
 
 
 # --------------------------------------------------------------------------

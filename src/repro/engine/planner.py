@@ -41,6 +41,10 @@ class Plan:
     cap: int = 0           # per-segment capacity; 0 = derive from shape
     levels: int = 1        # tree levels fused per pass (MergeSchedule)
     tie: str = "b"         # selector tie policy: 'b' (alg.1) | 'skew' (alg.2)
+    # sharded (cross-device) ops only — engine/sharded.py, DESIGN.md §6
+    cap_factor: int = 4    # base bucket cap = cap_factor * n_local / n_dev
+    splitter: str = "hist"  # splitter policy: 'regular' | 'hist'
+    retries: int = 2       # cap-doubling rungs in the overflow-recovery ladder
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -54,7 +58,7 @@ class Plan:
         return dataclasses.replace(self, **kw)
 
 
-Key = Tuple[str, str, str, int, int]
+Key = Tuple[str, str, str, int, int, str]
 
 
 def backend_name() -> str:
@@ -62,20 +66,25 @@ def backend_name() -> str:
 
 
 def plan_key(op: str, *, n: int, dtype, backend: Optional[str] = None,
-             segments: int = 0) -> Key:
-    """Bucketed cache key: op, backend, dtype, pow2(n), pow2(segments)."""
+             segments: int = 0, axis: str = "") -> Key:
+    """Bucketed cache key: op, backend, dtype, pow2(n), pow2(segments), and —
+    for the sharded ops — the mesh axis name (``segments`` then carries the
+    device count P along that axis)."""
     return (op, backend or backend_name(), str(jax.numpy.dtype(dtype)),
-            _next_pow2(n), _next_pow2(segments) if segments else 0)
+            _next_pow2(n), _next_pow2(segments) if segments else 0, axis)
 
 
 def _key_str(key: Key) -> str:
-    op, backend, dtype, n, s = key
-    return f"{op}|{backend}|{dtype}|n{n}|s{s}"
+    op, backend, dtype, n, s, axis = key
+    base = f"{op}|{backend}|{dtype}|n{n}|s{s}"
+    return base + (f"|a{axis}" if axis else "")
 
 
 def _key_parse(s: str) -> Key:
-    op, backend, dtype, n, seg = s.split("|")
-    return (op, backend, dtype, int(n[1:]), int(seg[1:]))
+    parts = s.split("|")
+    op, backend, dtype, n, seg = parts[:5]
+    axis = parts[5][1:] if len(parts) > 5 else ""   # pre-PR4 tables: 5 fields
+    return (op, backend, dtype, int(n[1:]), int(seg[1:]), axis)
 
 
 # --------------------------------------------------------------------------
@@ -83,7 +92,7 @@ def _key_parse(s: str) -> Key:
 # --------------------------------------------------------------------------
 
 def heuristic_plan(op: str, key: Key) -> Plan:
-    _, backend, _, n, _ = key
+    _, backend, _, n, _, _ = key
     w = max(8, min(128, _next_pow2(max(n, 1) // 64)))
     block_out = max(w, min(4096, _next_pow2(max(n, 1)) // 8 or w))
     if backend == "tpu":
@@ -91,16 +100,18 @@ def heuristic_plan(op: str, key: Key) -> Plan:
                  "topk": "flims", "segment_merge": "pallas",
                  "segment_sort": "pallas_two_phase",
                  "segment_argsort": "pallas_two_phase",
-                 "merge_runs": "tree_pallas"}
+                 "merge_runs": "tree_pallas",
+                 "sharded_sort": "tree_pallas", "sharded_topk": "flims"}
         # fuse two tree levels per pass by default on the real hardware
-        levels = 2 if op == "merge_runs" else 1
+        levels = 2 if op in ("merge_runs", "sharded_sort") else 1
     else:
         # CPU/GPU interpret-mode kernels are for correctness, not speed:
         # serve the hot path from XLA, keep merge on the banked dataflow.
         table = {"sort": "xla", "merge": "banked", "argsort": "xla",
                  "topk": "xla", "segment_merge": "xla",
                  "segment_sort": "xla", "segment_argsort": "xla",
-                 "merge_runs": "xla"}
+                 "merge_runs": "xla",
+                 "sharded_sort": "xla", "sharded_topk": "xla"}
         levels = 1
     return Plan(variant=table[op], w=w, block_out=block_out, chunk=256,
                 levels=levels)
@@ -200,7 +211,7 @@ class Planner:
 
 def candidate_plans(op: str, key: Key):
     """Small per-op search grid over the registered variants."""
-    _, _, _, n, _ = key
+    _, _, _, n, _, _ = key
     out = []
     for variant in registry.variants(op):
         if op == "merge_runs":
@@ -210,6 +221,15 @@ def candidate_plans(op: str, key: Key):
                            for lv in (1, 2, 3))
             else:
                 out.append(Plan(variant, w=32))
+        elif op == "sharded_sort":
+            # dofs: local-reduction executor (x fused depth) and splitter
+            # policy — cap_factor/retries stay at their contract defaults
+            for splitter in ("regular", "hist"):
+                if variant == "tree_pallas":
+                    out.extend(Plan(variant, w=32, levels=lv,
+                                    splitter=splitter) for lv in (1, 2))
+                else:
+                    out.append(Plan(variant, w=32, splitter=splitter))
         elif op in ("merge", "segment_merge"):
             for w in (32, 128):
                 for block_out in (1024, 4096):

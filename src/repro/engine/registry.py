@@ -224,3 +224,34 @@ def _merge_runs_with(variant):
 
 for _v in ("xla", "tree_vmapped", "tree_pallas"):
     register("merge_runs", _v)(_merge_runs_with(_v))
+
+
+# --------------------------------------------------------------------------
+# sharded_sort / sharded_topk: cross-device sample sort and top-k — the
+# variant names the local K-way reduction executor (sharded_sort) or the
+# local top-k formulation (sharded_topk); splitter policy, cap_factor and
+# the overflow-recovery retries ride the plan (DESIGN.md §6)
+# --------------------------------------------------------------------------
+
+def _sharded_sort_with(executor):
+    def fn(x, mesh, axis, *, plan, interpret, payload=None):
+        from repro.engine.sharded import run_sharded_sort
+        return run_sharded_sort(x, mesh, axis, payload=payload,
+                                plan=plan.replace(variant=executor))
+    return fn
+
+
+for _v in ("xla", "tree_vmapped", "tree_pallas"):
+    register("sharded_sort", _v)(_sharded_sort_with(_v))
+
+
+def _sharded_topk_with(variant):
+    def fn(x, k, mesh, axis, *, plan, interpret, payload=None):
+        from repro.engine.sharded import run_sharded_topk
+        return run_sharded_topk(x, k, mesh, axis, payload=payload,
+                                plan=plan.replace(variant=variant))
+    return fn
+
+
+for _v in ("flims", "xla"):
+    register("sharded_topk", _v)(_sharded_topk_with(_v))

@@ -88,6 +88,15 @@ class MergeSchedule:
                    w=plan.w, block_out=plan.block_out,
                    tie=getattr(plan, "tie", "b"))
 
+    def to_plan(self, **extra):
+        """Lower the schedule into an engine ``Plan`` (the inverse of
+        ``from_plan``) — how a raw ``merge_schedule=`` kwarg enters the
+        planned sharded ops. ``extra`` sets further Plan fields
+        (``cap_factor``, ``splitter``, ``retries``, ...)."""
+        from repro.engine.planner import Plan
+        return Plan(variant=self.variant, w=self.w, block_out=self.block_out,
+                    levels=self.levels_per_pass, tie=self.tie, **extra)
+
     def replace(self, **kw) -> "MergeSchedule":
         return dataclasses.replace(self, **kw)
 

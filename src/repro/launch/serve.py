@@ -23,7 +23,7 @@ from repro.models.model import build_model, sample_topk
 
 
 def serve(cfg, batch: int, prompt_len: int, gen: int, max_seq: int = 0,
-          use_flims_topk: bool = None, seed: int = 0):
+          use_flims_topk: bool = None, seed: int = 0, topk: int = 16):
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
     params = model.init(key)
@@ -56,7 +56,7 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, max_seq: int = 0,
     @jax.jit
     def step(params, tok, pos, cache, key):
         logits, cache = model.decode_step(params, tok, pos, cache)
-        nxt = sample_topk(key, logits, k=16, use_flims=use_flims_topk)
+        nxt = sample_topk(key, logits, k=topk, use_flims=use_flims_topk)
         return nxt, cache
 
     tok = prompts[:, -1]
@@ -80,12 +80,18 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--topk", type=int, default=16,
+                    help="sampler top-k width (was hardcoded to 16)")
     ap.add_argument("--lax-topk", action="store_true",
                     help="pin the sampler to lax.top_k")
     ap.add_argument("--flims-topk", action="store_true",
                     help="pin the sampler to the FLiMS merge-tree top-k")
     ap.add_argument("--plans", default=None,
                     help="JSON plan table to preload into the engine")
+    ap.add_argument("--save-plans", default=None, metavar="OUT",
+                    help="write the engine's plan table (autotuned or "
+                         "resolved during this run) back to JSON, so it "
+                         "round-trips into a later --plans")
     args = ap.parse_args(argv)
     cfg = get_config(args.arch)
     if args.reduced:
@@ -99,10 +105,14 @@ def main(argv=None):
     elif args.flims_topk:
         use_flims = True
     toks, dt = serve(cfg, args.batch, args.prompt_len, args.gen,
-                     use_flims_topk=use_flims)
+                     use_flims_topk=use_flims, topk=args.topk)
     print(f"[serve] generated {toks.shape} tokens in {dt:.2f}s "
           f"({toks.shape[0] * toks.shape[1] / dt:.1f} tok/s)")
     print(toks[:2, :16])
+    if args.save_plans:
+        from repro import engine
+        engine.save_plans(args.save_plans)
+        print(f"[serve] wrote engine plan table to {args.save_plans}")
     return 0
 
 

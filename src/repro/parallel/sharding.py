@@ -4,10 +4,18 @@ Name-based rules map every parameter leaf to a PartitionSpec on the
 production mesh axes. Leading stacked-layer dims are always replicated
 (None-prefixed). Dims that don't divide the mesh axis fall back to None —
 so the same rules work on the 2-device test mesh and the 512-chip pod mesh.
+
+Also the consumer-facing face of the sharded sort/top-k subsystem
+(``engine.sharded_sort`` / ``engine.sharded_topk``, DESIGN.md §6):
+``data_shard_1d`` places a flat array on a mesh axis and
+``collect_sorted`` / ``collect_prefixes`` gather the per-device valid
+prefixes of a ``ShardedSort`` result back into the flat global order.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -132,6 +140,38 @@ def batch_spec(batch_shape_tree, sc: ShardingConfig, mesh: Mesh):
         return P(dp if dp else None, *([None] * (nd - 1)))
 
     return jax.tree.map(one, batch_shape_tree)
+
+
+# --------------------------------------------------------------------------
+# distributed sort / top-k consumers (engine.sharded, DESIGN.md §6)
+# --------------------------------------------------------------------------
+
+def data_shard_1d(x, mesh: Mesh, axis: str = "data"):
+    """Place a 1-D array (or pytree of same-length 1-D arrays) onto ``axis``
+    of ``mesh`` — the input layout of ``engine.sharded_sort`` and
+    ``engine.sharded_topk``."""
+    sh = NamedSharding(mesh, P(axis))
+    return jax.tree.map(lambda v: jax.device_put(v, sh), x)
+
+
+def collect_prefixes(values, counts) -> np.ndarray:
+    """Host-side gather of per-device valid prefixes: ``values`` is the
+    global (P * cap,)-concatenated padded array of a sharded-sort result
+    (keys or any payload leaf), ``counts`` the (P,) per-device valid
+    lengths. Returns the flat (sum(counts),) array in global order."""
+    c = np.asarray(counts)
+    v = np.asarray(values).reshape(c.shape[0], -1)
+    return np.concatenate([v[i][: c[i]] for i in range(c.shape[0])])
+
+
+def collect_sorted(result, payload=None):
+    """Gather an ``engine.ShardedSort`` result (and optionally the matching
+    payload pytree) into flat host arrays in global descending order."""
+    keys = collect_prefixes(result.values, result.count)
+    if payload is None:
+        return keys
+    return keys, jax.tree.map(
+        lambda v: collect_prefixes(v, result.count), payload)
 
 
 def cache_specs(cache, sc: ShardingConfig, mesh: Mesh):

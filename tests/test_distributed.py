@@ -80,6 +80,138 @@ def test_sample_sort_payload_8dev():
     assert "OK" in out
 
 
+def test_sharded_sort_overflow_recovery():
+    """The documented overflow contract (regression): a zipf-skewed input
+    whose duplicate mass overflows the fixed cap at cap_factor=4 must NOT be
+    silently truncated. retries=0 reproduces the old behaviour (overflow
+    flagged, data lost); the default bounded cap-escalation ladder — in both
+    ``sample_sort`` and ``engine.sharded_sort`` — recovers the exact global
+    order with ``overflow=False``."""
+    out = _run("""
+        from repro import engine
+        from repro.core.distributed import sample_sort
+        from repro.parallel.sharding import collect_sorted, data_shard_1d
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(3)
+        n = 8 * 2048
+        z = np.minimum(rng.zipf(2.0, n), 10**6).astype(np.int32)
+        zs = data_shard_1d(jnp.array(z), mesh)
+        oracle = np.sort(z)[::-1]
+        # old single-shot behaviour: the bucket holding the duplicate mass
+        # exceeds cap = 4 * n_local / P, data is truncated
+        r0 = sample_sort(zs, mesh, axis="data", w=16, retries=0)
+        assert np.asarray(r0.overflow).any(), "input must overflow the cap"
+        assert np.asarray(r0.count).sum() < n, "truncation is the old bug"
+        # the contract, honoured: bounded in-graph cap escalation
+        r1 = sample_sort(zs, mesh, axis="data", w=16)
+        assert not np.asarray(r1.overflow).any()
+        assert (collect_sorted(r1) == oracle).all()
+        # and the planned engine op (hist splitters, xla reduce on CPU)
+        r2 = engine.sharded_sort(zs, mesh)
+        assert not np.asarray(r2.overflow).any()
+        assert (collect_sorted(r2) == oracle).all()
+        # the fused Pallas merge-tree executor walks the same ladder
+        r3 = engine.sharded_sort(zs, mesh, plan=engine.Plan(
+            "tree_pallas", w=16, levels=2))
+        assert not np.asarray(r3.overflow).any()
+        assert (collect_sorted(r3) == oracle).all()
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sample_sort_tiny_shards():
+    """n_local < n_dev (regression): ``loc[::step][:n_dev]`` produced fewer
+    than n_dev splitter samples, silently skewing the all-gathered sample
+    stride; samples are now padded to a static n_dev by index clamping."""
+    out = _run("""
+        from repro.core.distributed import sample_sort
+        from repro.parallel.sharding import collect_sorted, data_shard_1d
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(5)
+        for n_local in (1, 2, 4):
+            t = rng.integers(-9, 9, 8 * n_local).astype(np.int32)
+            res = sample_sort(data_shard_1d(jnp.array(t), mesh), mesh,
+                              axis="data", w=8)
+            assert not np.asarray(res.overflow).any(), n_local
+            assert (collect_sorted(res) == np.sort(t)[::-1]).all(), n_local
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_distributed_stability_ties_and_cap_boundary():
+    """Distributed stability: all-equal and heavy-tie keys across 8 devices.
+    All-equal keys route EVERY element into one bucket — the worst-case
+    skew, each bucket row filled to exactly its cap (count == cap), so this
+    also pins payload validity at the cap boundary: the permutation must be
+    exact global input order (stable, algorithm 3) with no padding garbage
+    inside any count prefix."""
+    out = _run("""
+        from repro import engine
+        from repro.parallel.sharding import collect_sorted, data_shard_1d
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        n = 8 * 512
+        gidx = jnp.arange(n, dtype=jnp.int32)
+        # --- all-equal: one bucket takes everything, rows exactly at cap ---
+        e = np.full(n, 7, np.int32)
+        res, pay = engine.sharded_sort(data_shard_1d(jnp.array(e), mesh),
+                                       mesh,
+                                       payload=data_shard_1d(gidx, mesh))
+        assert not np.asarray(res.overflow).any()
+        cnts = np.asarray(res.count)
+        assert cnts.tolist() == [n] + [0] * 7   # device 0 holds all, == cap
+        keys, perm = collect_sorted(res, pay)
+        assert (keys == 7).all() and keys.shape[0] == n
+        assert (perm == np.arange(n)).all()     # bit-exact stable order
+        # --- heavy ties: 3 distinct values, payload = distributed argsort --
+        rng = np.random.default_rng(11)
+        h = rng.choice([3, 7, 9], n).astype(np.int32)
+        res, pay = engine.sharded_sort(data_shard_1d(jnp.array(h), mesh),
+                                       mesh,
+                                       payload=data_shard_1d(gidx, mesh))
+        assert not np.asarray(res.overflow).any()
+        keys, perm = collect_sorted(res, pay)
+        exp = np.argsort(-h, kind="stable")
+        assert (keys == h[exp]).all()
+        assert (perm == exp).all()
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_sharded_topk_8dev():
+    """engine.sharded_topk == lax.top_k of the gathered array, bit-for-bit
+    (values, global indices, tie order), payload lanes riding along."""
+    out = _run("""
+        from repro import engine
+        from repro.parallel.sharding import data_shard_1d
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        rng = np.random.default_rng(2)
+        n = 8 * 1024
+        x = rng.integers(-40, 40, n).astype(np.int32)     # heavy ties
+        xs = data_shard_1d(jnp.array(x), mesh)
+        pay = data_shard_1d(jnp.arange(n, dtype=jnp.int32) * 5, mesh)
+        for k in (1, 16, 100):
+            v, i, p = engine.sharded_topk(xs, k, mesh, payload=pay)
+            ev, ei = jax.lax.top_k(jnp.array(x), k)
+            assert (np.asarray(v) == np.asarray(ev)).all(), k
+            assert (np.asarray(i) == np.asarray(ei)).all(), k
+            assert (np.asarray(p) == np.asarray(ei) * 5).all(), k
+        # k wider than one local shard still covers the global answer
+        v, i = engine.sharded_topk(xs, 2048, mesh)
+        ev, ei = jax.lax.top_k(jnp.array(x), 2048)
+        assert (np.asarray(v) == np.asarray(ev)).all()
+        assert (np.asarray(i) == np.asarray(ei)).all()
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_sharded_train_step_matches_single_device():
     """One train step on a 2x4 mesh == the same step on 1 device."""
     out = _run("""

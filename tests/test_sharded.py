@@ -1,0 +1,163 @@
+"""engine.sharded: plan keys, cap ladder, schedule lowering, and the
+single-device end-to-end path (multi-device coverage with real collectives
+lives in tests/test_distributed.py)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import engine
+from repro.engine.planner import (Plan, Planner, candidate_plans,
+                                  heuristic_plan, plan_key, _key_parse,
+                                  _key_str)
+from repro.engine.schedule import MergeSchedule
+from repro.engine.sharded import cap_ladder
+
+RNG = np.random.default_rng(23)
+
+
+def _mesh1():
+    return jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,),
+                         devices=jax.devices()[:1])
+
+
+# --------------------------------------------------------------------------
+# cap ladder: the overflow-recovery rungs
+# --------------------------------------------------------------------------
+
+def test_cap_ladder_reaches_n_local():
+    # the documented base cap, then doubling to the bucket-size upper bound
+    assert cap_ladder(2048, 8, cap_factor=4, retries=2) == (1024, 2048)
+    assert cap_ladder(2048, 8, cap_factor=1, retries=8) == (256, 512, 1024,
+                                                            2048)
+    # bounded: retries limits the rungs even when n_local is out of reach
+    assert cap_ladder(4096, 64, cap_factor=1, retries=2) == (64, 128, 256)
+    # retries=0 is the old single-shot behaviour
+    assert cap_ladder(2048, 8, cap_factor=4, retries=0) == (1024,)
+    # tiny shards: base cap never exceeds n_local
+    assert cap_ladder(4, 8, cap_factor=4, retries=2) == (4,)
+
+
+def test_cap_ladder_monotone():
+    for n_local in (16, 100, 4096):
+        for n_dev in (2, 8, 64):
+            caps = cap_ladder(n_local, n_dev, 4, 5)
+            assert all(a < b for a, b in zip(caps, caps[1:]))
+            assert caps[-1] <= n_local
+
+
+# --------------------------------------------------------------------------
+# plan keys: mesh axis + P ride the cache key; JSON round-trip
+# --------------------------------------------------------------------------
+
+def test_plan_key_carries_mesh_axis():
+    k1 = plan_key("sharded_sort", n=1 << 14, dtype=np.int32, backend="cpu",
+                  segments=8, axis="data")
+    k2 = plan_key("sharded_sort", n=1 << 14, dtype=np.int32, backend="cpu",
+                  segments=8, axis="model")
+    k3 = plan_key("sharded_sort", n=1 << 14, dtype=np.int32, backend="cpu",
+                  segments=16, axis="data")
+    assert len({k1, k2, k3}) == 3
+    assert _key_parse(_key_str(k1)) == k1
+    # pre-PR4 five-field strings still parse (empty axis)
+    legacy = "sort|cpu|float32|n1024|s0"
+    assert _key_parse(legacy) == ("sort", "cpu", "float32", 1024, 0, "")
+
+
+def test_sharded_plan_json_roundtrip(tmp_path):
+    pl = Planner()
+    key = plan_key("sharded_sort", n=1 << 15, dtype=np.float32,
+                   backend="cpu", segments=8, axis="data")
+    plan = Plan("tree_pallas", w=64, levels=2, splitter="hist",
+                cap_factor=8, retries=3)
+    pl.put(key, plan)
+    path = tmp_path / "plans.json"
+    pl.save(str(path))
+    fresh = Planner()
+    fresh.load(str(path))
+    assert fresh.lookup(key) == plan
+
+
+def test_sharded_heuristics_and_candidates():
+    for op, cpu_v, tpu_v in [("sharded_sort", "xla", "tree_pallas"),
+                             ("sharded_topk", "xla", "flims")]:
+        kc = plan_key(op, n=1 << 14, dtype=np.int32, backend="cpu",
+                      segments=8, axis="data")
+        kt = plan_key(op, n=1 << 14, dtype=np.int32, backend="tpu",
+                      segments=8, axis="data")
+        assert heuristic_plan(op, kc).variant == cpu_v
+        assert heuristic_plan(op, kt).variant == tpu_v
+        assert {p.variant for p in candidate_plans(op, kc)} \
+            == set(engine.registry.variants(op))
+    # the sort grid sweeps both splitter policies
+    kc = plan_key("sharded_sort", n=1 << 14, dtype=np.int32, backend="cpu",
+                  segments=8, axis="data")
+    assert {p.splitter for p in candidate_plans("sharded_sort", kc)} \
+        == {"regular", "hist"}
+
+
+def test_merge_schedule_to_plan_roundtrip():
+    sched = MergeSchedule("tree_pallas", levels_per_pass=3, w=16,
+                          block_out=512, tie="skew")
+    plan = sched.to_plan(cap_factor=2, retries=1, splitter="regular")
+    assert (plan.variant, plan.levels, plan.w, plan.tie) \
+        == ("tree_pallas", 3, 16, "skew")
+    assert (plan.cap_factor, plan.retries, plan.splitter) \
+        == (2, 1, "regular")
+    back = MergeSchedule.from_plan(plan)
+    assert back == sched
+
+
+# --------------------------------------------------------------------------
+# single-device end-to-end (collectives degenerate, pipeline identical)
+# --------------------------------------------------------------------------
+
+def test_sharded_sort_single_device():
+    mesh = _mesh1()
+    x = RNG.integers(-999, 999, 512).astype(np.int32)
+    for splitter in ("regular", "hist"):
+        res = engine.sharded_sort(jnp.array(x), mesh,
+                                  plan=Plan("xla", w=16, splitter=splitter))
+        assert not np.asarray(res.overflow).any()
+        assert int(np.asarray(res.count).sum()) == 512
+        got = np.asarray(res.values)[:512]
+        np.testing.assert_array_equal(got, np.sort(x)[::-1])
+
+
+def test_sharded_sort_single_device_payload_stable():
+    mesh = _mesh1()
+    x = RNG.integers(0, 4, 256).astype(np.int32)      # heavy ties
+    res, pay = engine.sharded_sort(jnp.array(x), mesh,
+                                   payload=jnp.arange(256, dtype=jnp.int32))
+    perm = np.asarray(pay)[:256]
+    np.testing.assert_array_equal(perm, np.argsort(-x, kind="stable"))
+    np.testing.assert_array_equal(np.asarray(res.values)[:256], x[perm])
+
+
+def test_sharded_topk_single_device():
+    mesh = _mesh1()
+    x = RNG.integers(-99, 99, 300).astype(np.float32)
+    v, i = engine.sharded_topk(jnp.array(x), 7, mesh)
+    ev, ei = jax.lax.top_k(jnp.array(x), 7)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(ev))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ei))
+
+
+def test_sharded_autotune_installs_plan():
+    mesh = _mesh1()
+    x = jnp.array(RNG.integers(-999, 999, 1024).astype(np.int32))
+    engine.clear_plans()
+    try:
+        plan = engine.autotune(
+            "sharded_sort", x, mesh, "data", repeats=1,
+            candidates=[Plan("xla", splitter="hist"),
+                        Plan("tree_vmapped", w=16)])
+        assert plan.variant in ("xla", "tree_vmapped")
+        key = plan_key("sharded_sort", n=1024, dtype=np.int32, segments=1,
+                       axis="data")
+        assert engine.default_planner.lookup(key) == plan
+        # the tuned plan serves the op
+        res = engine.sharded_sort(x, mesh)
+        assert int(np.asarray(res.count).sum()) == 1024
+    finally:
+        engine.clear_plans()
