@@ -27,8 +27,7 @@ def run():
             us[variant] = time_fn(fn, x)
         best = min(us.values())
         for v, u in us.items():
-            out.append(row(f"argsort/{v}/n{n}", u,
-                           f"n={n};vs_best={u / best:.2f}"))
+            out.append(row(f"argsort/{v}/n{n}", u, n=n, vs_best=u / best))
     # ragged segment_argsort on the MoE-dispatch shape (uniform segments)
     S, L = 8, 2048
     keys = jnp.array(rng.integers(0, 8, S * L).astype(np.int32))
@@ -40,6 +39,6 @@ def run():
         us[variant] = time_fn(fn, keys, offs)
     best = min(us.values())
     for v, u in us.items():
-        out.append(row(f"segment_argsort/{v}", u,
-                       f"S={S};N={S * L};cap={L};vs_best={u / best:.2f}"))
+        out.append(row(f"segment_argsort/{v}", u, S=S, N=S * L, cap=L,
+                       vs_best=u / best))
     return out

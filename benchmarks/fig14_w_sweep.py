@@ -1,13 +1,15 @@
 """Paper Fig. 14: merge throughput vs degree of parallelism w.
 
 Two sorted random inputs of 2^18 int32 each, merged by the banked FLiMS
-(the SIMD-style implementation). Derived: Melem/s and the best w.
+(the SIMD-style implementation). Derived: Melem/s, achieved GB/s under the
+one-pass streaming model, and the roofline bandwidth bound.
 """
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import bw_fields, row, time_fn
 from repro.core import flims_merge_banked, flims_merge_ref
+from repro.launch.roofline import stream_bytes
 
 
 def run(n: int = 1 << 18):
@@ -15,6 +17,7 @@ def run(n: int = 1 << 18):
     a = np.sort(rng.integers(-2**31, 2**31 - 1, n).astype(np.int32))[::-1]
     b = np.sort(rng.integers(-2**31, 2**31 - 1, n).astype(np.int32))[::-1]
     ja, jb = jnp.array(a), jnp.array(b)
+    nbytes = stream_bytes(2 * n, 4)     # read + write every element once
     out = []
     best = (0.0, None)
     for w in (4, 8, 16, 32, 64, 128, 256, 512):
@@ -22,10 +25,11 @@ def run(n: int = 1 << 18):
         meps = 2 * n / us
         if meps > best[0]:
             best = (meps, w)
-        out.append(row(f"fig14/banked/w{w}", us, f"Melem_s={meps:.1f}"))
+        out.append(row(f"fig14/banked/w{w}", us, Melem_s=meps,
+                       **bw_fields(nbytes, us)))
     for w in (32, 128):
         us = time_fn(lambda: flims_merge_ref(ja, jb, w))
-        out.append(row(f"fig14/sorted_space/w{w}", us,
-                       f"Melem_s={2 * n / us:.1f}"))
-    out.append(row("fig14/best", 0.0, f"w={best[1]};Melem_s={best[0]:.1f}"))
+        out.append(row(f"fig14/sorted_space/w{w}", us, Melem_s=2 * n / us,
+                       **bw_fields(nbytes, us)))
+    out.append(row("fig14/best", 0.0, w=best[1], Melem_s=best[0]))
     return out

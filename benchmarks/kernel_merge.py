@@ -1,10 +1,11 @@
 """Pallas kernel benchmarks (interpret mode on CPU — correctness-path proxy;
-real perf target is TPU Mosaic). Derived: Melem/s + op counts."""
+real perf target is TPU Mosaic). Derived: Melem/s plus roofline GB/s."""
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import bw_fields, row, time_fn
 from repro.kernels.ops import merge, sort_rows
+from repro.launch.roofline import stream_bytes
 
 
 def run(n: int = 1 << 15):
@@ -14,10 +15,11 @@ def run(n: int = 1 << 15):
     ja, jb = jnp.array(a), jnp.array(b)
     out = []
     us = time_fn(lambda: merge(ja, jb, w=128, block_out=4096), repeats=3)
-    out.append(row("kernel/flims_merge_interp", us,
-                   f"Melem_s={2 * n / us:.2f}"))
+    out.append(row("kernel/flims_merge_interp", us, Melem_s=2 * n / us,
+                   **bw_fields(stream_bytes(2 * n, 4), us)))
     x = jnp.array(rng.integers(-10**9, 10**9, (64, 512)).astype(np.int32))
     us = time_fn(lambda: sort_rows(x), repeats=3)
     out.append(row("kernel/bitonic_chunks_interp", us,
-                   f"Melem_s={64 * 512 / us:.2f}"))
+                   Melem_s=64 * 512 / us,
+                   **bw_fields(stream_bytes(64 * 512, 4), us)))
     return out

@@ -14,15 +14,23 @@ Four sections:
 - ``sample_local/*`` the sample-sort local phase shape: P sentinel-padded
                     count-valid runs reduced per schedule
                     (``pmt_merge_padded``).
+
+Tree rows carry roofline columns under the pass model of
+``repro.launch.roofline``: each executor's HBM traffic is
+``2·n·itemsize`` per pass, with ``tree_pallas@L`` taking ``ceil(levels/L)``
+passes and ``xla`` one — so ``gbps``/``roof_frac`` make the fused-levels
+saving directly visible next to the raw microseconds.
 """
 import numpy as np
 import jax.numpy as jnp
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import bw_fields, row, time_fn
 from repro.core import pmt_merge
 from repro.core.merge_tree import pmt_merge_padded
 from repro.engine.schedule import (MergeSchedule, default_interpret,
                                    merge_runs, reduce_rows)
+from repro.launch.roofline import (merge_tree_passes, sort_stream_bytes,
+                                   stream_bytes)
 
 _INTERP = default_interpret()    # interpret off-TPU, Mosaic on TPU
 
@@ -40,6 +48,14 @@ def _sched(tag):
                          block_out=4096)
 
 
+def _tree_passes(tag, n_runs):
+    """HBM round trips under the executor's fusion degree (xla ≡ one-shot)."""
+    if tag == "xla":
+        return 1
+    lv = 1 if tag == "vmapped" else int(tag.rsplit("L", 1)[1])
+    return merge_tree_passes(n_runs, lv)
+
+
 def run():
     rng = np.random.default_rng(3)
     out = []
@@ -51,7 +67,9 @@ def run():
                         axis=1)[:, ::-1].copy()
         jr = jnp.array(rows_)
         us = time_fn(lambda: pmt_merge(jr, w=32))
-        out.append(row(f"pmt/K{K}", us, f"Melem_s={K * n / us:.1f}"))
+        out.append(row(f"pmt/K{K}", us, Melem_s=K * n / us,
+                       **bw_fields(stream_bytes(K * n, 4,
+                                                merge_tree_passes(K)), us)))
 
     # --- engine merge_runs executors ---------------------------------------
     K, n = 64, 1 << 10                                  # 64 runs of 1024
@@ -63,8 +81,9 @@ def run():
         s = _sched(tag)
         us = time_fn(lambda s=s: merge_runs(jk, jo, schedule=s,
                                             interpret=_INTERP))
-        out.append(row(f"merge_runs/K{K}/{tag}", us,
-                       f"Melem_s={K * n / us:.1f}"))
+        out.append(row(f"merge_runs/K{K}/{tag}", us, Melem_s=K * n / us,
+                       **bw_fields(stream_bytes(K * n, 4,
+                                                _tree_passes(tag, K)), us)))
 
     # --- full sort: fused levels vs per-level tree -------------------------
     # Complete sort (chunk sort + tree reduction), each variant at its best
@@ -82,9 +101,12 @@ def run():
                        ("pallas_L1", 2048), ("pallas_L2", 4096),
                        ("pallas_L3", 4096)):
         s = _sched(tag)
+        lv = 1 if tag == "vmapped" else int(tag.rsplit("L", 1)[1])
         us = time_fn(lambda s=s, c=chunk: full_sort(c, s))
         out.append(row(f"full_sort/n2^16/{tag}/c{chunk}", us,
-                       f"Melem_s={n_full / us:.1f}"))
+                       Melem_s=n_full / us,
+                       **bw_fields(sort_stream_bytes(n_full, 4, chunk, lv),
+                                   us)))
 
     # --- sample-sort local phase: P padded count-valid runs ----------------
     P, cap = 8, 1 << 12
@@ -96,5 +118,7 @@ def run():
         s = _sched(tag)
         us = time_fn(lambda s=s: pmt_merge_padded(jl, jc, w=32, schedule=s))
         out.append(row(f"sample_local/P{P}/{tag}", us,
-                       f"Melem_s={P * cap / us:.1f}"))
+                       Melem_s=P * cap / us,
+                       **bw_fields(stream_bytes(P * cap, 4,
+                                                _tree_passes(tag, P)), us)))
     return out

@@ -32,24 +32,24 @@ def run():
 
     jd = jax.jit(lambda x: moe_apply_dense(p, x, cfg))
     ud = time_fn(jd, x)
-    out.append(row("moe/dense_e8k2", ud, "path=dense"))
+    out.append(row("moe/dense_e8k2", ud, path="dense"))
 
     # 'before': pin the dispatch argsort to the seed's pure-JAX FLiMS variant
     akey = engine.plan_key("argsort", n=pairs, dtype=jnp.int32)
     engine.default_planner.put(akey, engine.Plan("flims"))
     js_before = jax.jit(lambda x: moe_apply_sorted(p, x, cfg))
     ub = time_fn(js_before, x)
-    out.append(row("moe/sorted_e8k2_flims_argsort", ub,
-                   f"path=sorted;argsort=flims;vs_dense={ud / ub:.2f}"))
+    out.append(row("moe/sorted_e8k2_flims_argsort", ub, path="sorted",
+                   argsort="flims", vs_dense=ud / ub))
 
     # 'after': let the planner choose (XLA on CPU, FLiMS/Pallas on TPU)
     engine.default_planner.clear()
     js_after = jax.jit(lambda x: moe_apply_sorted(p, x, cfg))
     ua = time_fn(js_after, x)
     plan = engine.default_planner.lookup(akey)
-    out.append(row("moe/sorted_e8k2_engine", ua,
-                   f"path=sorted;argsort={plan.variant if plan else 'n/a'};"
-                   f"vs_dense={ud / ua:.2f};vs_before={ub / ua:.2f}"))
+    out.append(row("moe/sorted_e8k2_engine", ua, path="sorted",
+                   argsort=plan.variant if plan else "n/a",
+                   vs_dense=ud / ua, vs_before=ub / ua))
 
     # PR-2 dispatch path: the grouped route orders every device group's
     # (token, expert) pairs via one ragged engine.segment_argsort KV call
@@ -58,10 +58,10 @@ def run():
     splan = next((engine.Plan.from_dict(pd)
                   for ks, pd in engine.default_planner.to_table().items()
                   if ks.startswith("segment_argsort|")), None)
-    out.append(row("moe/grouped_e8k2_segment_argsort", ug,
-                   f"path=grouped;dispatch=segment_argsort"
-                   f";variant={splan.variant if splan else 'n/a'};"
-                   f"vs_dense={ud / ug:.2f}"))
+    out.append(row("moe/grouped_e8k2_segment_argsort", ug, path="grouped",
+                   dispatch="segment_argsort",
+                   variant=splan.variant if splan else "n/a",
+                   vs_dense=ud / ug))
 
     # the dispatch sort in isolation: planner's variant swap, same key shape
     e_keys = jnp.array(np.random.default_rng(2).integers(
@@ -73,8 +73,8 @@ def run():
         us_by_variant[variant] = time_fn(fn, e_keys)
     for variant, us in us_by_variant.items():
         best = min(us_by_variant.values())
-        out.append(row(f"engine/argsort_{variant}", us,
-                       f"n={pairs};vs_best={us / best:.2f}"))
+        out.append(row(f"engine/argsort_{variant}", us, n=pairs,
+                       vs_best=us / best))
 
     # ragged segment_sort: per-expert slab shape (64 segments, ~16k values)
     rng = np.random.default_rng(0)
@@ -85,6 +85,6 @@ def run():
         fn = jax.jit(lambda v, o, var=variant: engine.segment_sort(
             v, o, cap=512, variant=var))
         us = time_fn(fn, vals, offs)
-        out.append(row(f"engine/segment_sort_{variant}", us,
-                       f"S=64;N={int(lens.sum())};cap=512"))
+        out.append(row(f"engine/segment_sort_{variant}", us, S=64,
+                       N=int(lens.sum()), cap=512))
     return out

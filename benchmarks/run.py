@@ -1,22 +1,50 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (plus section comments).
-``--json out.json`` additionally records the rows as structured JSON so the
-repo can keep a ``BENCH_*.json`` perf trajectory across PRs; ``--only``
-restricts to matching sections (used by the CI smoke step).
+Section modules yield structured ``benchmarks.common.Row`` records; stdout
+stays the familiar ``name,us_per_call,derived`` CSV (a *rendering* of the
+rows), and ``--json out.json`` records the typed rows plus an environment
+metadata block (backend, device count/kind, jax version, git sha,
+timestamp) so the repo's ``BENCH_*.json`` perf trajectory stays
+interpretable across machines and PRs. ``--only`` restricts to matching
+sections (the CI smoke step); ``scripts/perf_check.py`` diffs two JSON
+outputs and gates on regressions.
 """
 import argparse
 import json
 import sys
 
+from benchmarks.common import HEADER, Row, env_metadata
+
+
+def collect(sections, out=sys.stdout):
+    """Run every section, render rows to ``out``, return JSON records.
+    A section that yields anything but ``Row`` objects is a hard error —
+    the old CSV re-parsing silently mis-parsed free-form lines."""
+    records = []
+    print(HEADER, file=out)
+    for mod, label in sections:
+        print(f"# --- {label} ---", file=out)
+        for r in mod.run():
+            if not isinstance(r, Row):
+                raise TypeError(
+                    f"benchmark section {mod.__name__} yielded "
+                    f"{type(r).__name__} ({r!r}); sections must yield "
+                    f"benchmarks.common.Row")
+            print(r.render(), file=out, flush=True)
+            records.append(r.to_record(label))
+    return records
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="OUT",
-                    help="also write rows as structured JSON")
+                    help="also write rows + env metadata as structured JSON")
     ap.add_argument("--only", default=None,
                     help="run only sections whose module name contains one "
                          "of these comma-separated substrings")
+    ap.add_argument("--timestamp", default=None,
+                    help="timestamp recorded verbatim in the JSON metadata "
+                         "(CI passes its own; defaults to now, UTC)")
     args = ap.parse_args(argv)
 
     from benchmarks import (argsort_bench, fig14_w_sweep, fig15_full_sort,
@@ -37,18 +65,16 @@ def main(argv=None) -> None:
         sections = [(m, l) for m, l in sections
                     if any(k in m.__name__ for k in keys)]
 
-    records = []
-    print("name,us_per_call,derived")
-    for mod, label in sections:
-        print(f"# --- {label} ---")
-        for line in mod.run():
-            print(line, flush=True)
-            name, us, derived = line.split(",", 2)
-            records.append({"section": label, "name": name,
-                            "us_per_call": float(us), "derived": derived})
+    records = collect(sections)
     if args.json:
+        timestamp = args.timestamp
+        if timestamp is None:
+            from datetime import datetime, timezone
+            timestamp = datetime.now(timezone.utc).isoformat(
+                timespec="seconds")
+        doc = {"meta": env_metadata(timestamp), "rows": records}
         with open(args.json, "w") as f:
-            json.dump({"rows": records}, f, indent=2)
+            json.dump(doc, f, indent=2)
         print(f"# wrote {len(records)} rows to {args.json}", file=sys.stderr)
 
 

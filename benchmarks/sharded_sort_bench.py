@@ -14,6 +14,8 @@ import os
 import subprocess
 import sys
 
+from benchmarks.common import Row
+
 _PROG = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -86,4 +88,7 @@ def run():
     if out.returncode != 0:
         raise RuntimeError("sharded bench subprocess failed:\n"
                            + out.stderr[-3000:])
-    return [ln for ln in out.stdout.splitlines() if ln.strip()]
+    # the subprocess emits Row.render()-format CSV; parse it back into
+    # structured rows (Row.parse raises naming any malformed line — stray
+    # prints in the child program become loud errors, not mangled rows)
+    return [Row.parse(ln) for ln in out.stdout.splitlines() if ln.strip()]

@@ -29,20 +29,20 @@ def run(n: int = 1 << 16, w: int = 32):
         kk = ks[:cyc - cyc % 4].reshape(-1, 4).mean(axis=1)
         imb = float(jnp.mean(jnp.abs(kk - w / 2)))
         us = time_fn(lambda t=tie: flims_merge_banked(ja, jb, w, tie=t))
-        out.append(row(f"skew/{tie}/w{w}", us,
-                       f"imbalance={imb:.2f};Melem_s={2 * n / us:.1f}"))
+        out.append(row(f"skew/{tie}/w{w}", us, imbalance=imb,
+                       Melem_s=2 * n / us))
 
     # the engine paths: tie= plumbed through Plan/MergeSchedule
     plan = engine.Plan("banked", w=w)
     for tie in ("b", "skew"):
         us = time_fn(lambda t=tie: engine.merge(ja, jb, tie=t, plan=plan))
         out.append(row(f"skew/engine_merge/{tie}/w{w}", us,
-                       f"Melem_s={2 * n / us:.1f}"))
+                       Melem_s=2 * n / us))
     runs = jnp.concatenate([ja, jb])
     offs = jnp.array([0, n, 2 * n], jnp.int32)
     for tie in ("b", "skew"):
         us = time_fn(lambda t=tie: engine.merge_runs(
             runs, offs, tie=t, plan=engine.Plan("tree_vmapped", w=w)))
         out.append(row(f"skew/merge_runs/{tie}/w{w}", us,
-                       f"Melem_s={2 * n / us:.1f}"))
+                       Melem_s=2 * n / us))
     return out

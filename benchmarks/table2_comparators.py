@@ -1,7 +1,7 @@
 """Paper Table 2: comparator counts per merger design and w.
 
 Analytic formulas (validated against jaxpr op counts in tests/test_table2.py).
-Derived column: FLiMS advantage factor vs each design.
+Derived columns: comparator count, FLiMS advantage factor, pipeline depth.
 """
 from repro.core import (comparators_basic, comparators_ehms,
                         comparators_flims, comparators_mms, comparators_pmt,
@@ -20,7 +20,7 @@ def run():
                          ("wms", comparators_wms),
                          ("ehms", comparators_ehms)):
             c = fn(w)
-            out.append(row(f"table2/{name}/w{w}", 0.0,
-                           f"comparators={c};flims_x={c / f:.2f};"
-                           f"depth={pipeline_depth(name if name != 'basic' else 'basic', w)}"))
+            depth = pipeline_depth(name if name != "basic" else "basic", w)
+            out.append(row(f"table2/{name}/w{w}", 0.0, comparators=c,
+                           flims_x=c / f, depth=depth))
     return out

@@ -1,0 +1,113 @@
+"""Perf regression gate: diff two ``benchmarks.run --json`` outputs.
+
+Compares a fresh benchmark JSON against a committed baseline, matching rows
+by (section, name), and fails when any row slowed down by more than the
+threshold (default 15%). Rows faster than ``--min-us`` in the baseline are
+skipped — shared-runner noise dominates micro-rows, so gating them is all
+false positives.
+
+Usage (the CI smoke gate):
+  PYTHONPATH=src python -m benchmarks.run --only argsort,moe \
+      --json bench_smoke.json
+  python scripts/perf_check.py benchmarks/baselines/smoke.json \
+      bench_smoke.json --threshold 0.5 --min-us 100 --allow-missing
+
+Exit status: 0 = within threshold, 1 = regression(s), 2 = row-set mismatch
+without ``--allow-missing``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+
+def load_rows(path: str) -> Dict[Tuple[str, str], dict]:
+    """Rows keyed by (section, name). Accepts the current ``{meta, rows}``
+    document shape or a bare row list (older artifacts)."""
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc["rows"] if isinstance(doc, dict) else doc
+    out = {}
+    for r in rows:
+        out[(r.get("section", ""), r["name"])] = r
+    return out
+
+
+def compare(baseline: Dict[Tuple[str, str], dict],
+            fresh: Dict[Tuple[str, str], dict], *,
+            threshold: float = 0.15,
+            min_us: float = 0.0) -> Tuple[List[str], List[str], List[str]]:
+    """Return (regressions, improvements, skipped) message lists.
+
+    A regression is fresh_us > baseline_us * (1 + threshold) on a row whose
+    baseline time is at least ``min_us``.
+    """
+    regressions, improvements, skipped = [], [], []
+    for key in sorted(set(baseline) & set(fresh)):
+        b, f = baseline[key]["us_per_call"], fresh[key]["us_per_call"]
+        label = "/".join(k for k in key if k) or key[1]
+        if b <= 0 or b < min_us:
+            skipped.append(f"{label}: baseline {b:.1f}us below --min-us "
+                           f"{min_us:.0f}")
+            continue
+        ratio = f / b
+        if ratio > 1 + threshold:
+            regressions.append(f"{label}: {b:.1f}us -> {f:.1f}us "
+                               f"({(ratio - 1) * 100:+.1f}%)")
+        elif ratio < 1 / (1 + threshold):
+            improvements.append(f"{label}: {b:.1f}us -> {f:.1f}us "
+                                f"({(ratio - 1) * 100:+.1f}%)")
+    return regressions, improvements, skipped
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("fresh", help="freshly measured JSON")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max allowed slowdown fraction (0.15 = +15%%)")
+    ap.add_argument("--min-us", type=float, default=0.0,
+                    help="ignore rows whose baseline is faster than this "
+                         "(noise floor)")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="tolerate rows present in only one file (sections "
+                         "added/removed between baseline and fresh)")
+    args = ap.parse_args(argv)
+
+    base = load_rows(args.baseline)
+    fresh = load_rows(args.fresh)
+
+    only_base = sorted(set(base) - set(fresh))
+    only_fresh = sorted(set(fresh) - set(base))
+    for key in only_base:
+        print(f"[perf_check] baseline-only row: {key}")
+    for key in only_fresh:
+        print(f"[perf_check] new row (no baseline): {key}")
+    if only_base and not args.allow_missing:
+        print(f"[perf_check] FAIL: {len(only_base)} baseline rows missing "
+              f"from fresh run (pass --allow-missing to tolerate)")
+        return 2
+
+    regs, imps, skipped = compare(base, fresh, threshold=args.threshold,
+                                  min_us=args.min_us)
+    for msg in skipped:
+        print(f"[perf_check] skip {msg}")
+    for msg in imps:
+        print(f"[perf_check] improved {msg}")
+    for msg in regs:
+        print(f"[perf_check] REGRESSION {msg}")
+    n = len(set(base) & set(fresh))
+    if regs:
+        print(f"[perf_check] FAIL: {len(regs)}/{n} compared rows regressed "
+              f"beyond +{args.threshold * 100:.0f}%")
+        return 1
+    print(f"[perf_check] OK: {n} rows compared, none regressed beyond "
+          f"+{args.threshold * 100:.0f}% "
+          f"({len(imps)} improved, {len(skipped)} below noise floor)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

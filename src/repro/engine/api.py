@@ -34,8 +34,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.engine import registry, segments
-from repro.engine.planner import (Plan, default_planner, plan_key,
+from repro.engine.planner import (Plan, _key_str, default_planner, plan_key,
                                   heuristic_plan)
 from repro.engine.schedule import MergeSchedule, default_interpret as _interpret
 
@@ -77,8 +78,20 @@ def _resolve(op: str, plan: Optional[Plan], variant: Optional[str], *args,
              **key_extra) -> Plan:
     if plan is None:
         key = infer_key(op, *args)
-        plan = default_planner.lookup(key) or heuristic_plan(op, key)
+        plan = default_planner.lookup(key)
+        if plan is None:
+            plan = heuristic_plan(op, key)
+            obs.inc("plan_cache.miss")
+            obs.inc("plan_cache.fallback")
+            obs.event("plan.resolve", op=op, key=_key_str(key),
+                      source="heuristic", variant=plan.variant)
+        else:
+            obs.inc("plan_cache.hit")
+            obs.event("plan.resolve", op=op, key=_key_str(key),
+                      source="cache", variant=plan.variant)
         default_planner.put(key, plan)
+    else:
+        obs.inc("plan_cache.pinned")
     if variant is not None:
         plan = plan.replace(variant=variant)
     return plan
@@ -94,7 +107,7 @@ def run_op(op: str, plan: Plan, *args):
     kw = {"plan": plan, "interpret": _interpret()}
     if op in ("argsort", "segment_argsort", "merge_runs"):
         kw["descending"] = True
-    return registry.get(op, plan.variant)(*args, **kw)
+    return registry.call(op, plan.variant, *args, **kw)
 
 
 # --------------------------------------------------------------------------
@@ -119,8 +132,8 @@ def sort(x, *, descending: bool = True, values=None, stable: bool = False,
             return keys
         return keys, jax.tree.map(lambda v: v[perm], values)
     plan = _resolve("sort", plan, variant, x)
-    out = registry.get("sort", plan.variant)(x, plan=plan,
-                                             interpret=_interpret())
+    out = registry.call("sort", plan.variant, x, plan=plan,
+                        interpret=_interpret())
     return out if descending else out[::-1]
 
 
@@ -133,8 +146,8 @@ def argsort(keys, *, descending: bool = True, plan: Optional[Plan] = None,
     ('pallas'), and XLA — callers may rely on it for MoE dispatch.
     """
     plan = _resolve("argsort", plan, variant, keys)
-    return registry.get("argsort", plan.variant)(
-        keys, plan=plan, descending=descending, interpret=_interpret())
+    return registry.call("argsort", plan.variant, keys, plan=plan,
+                         descending=descending, interpret=_interpret())
 
 
 def merge(a, b, *, descending: bool = True, values=None,
@@ -164,8 +177,8 @@ def merge(a, b, *, descending: bool = True, values=None,
     plan = _resolve("merge", plan, variant, a, b)
     if tie is not None and tie != plan.tie:
         plan = plan.replace(tie=tie)
-    return registry.get("merge", plan.variant)(a, b, plan=plan,
-                                               interpret=_interpret())
+    return registry.call("merge", plan.variant, a, b, plan=plan,
+                         interpret=_interpret())
 
 
 def _merge_kv(a, b, values, descending, plan, variant):
@@ -214,8 +227,8 @@ def topk(x, k: int, *, values=None, plan: Optional[Plan] = None,
     the FLiMS selector tree (or is gathered by the XLA variant).
     """
     plan = _resolve("topk", plan, variant, x)
-    return registry.get("topk", plan.variant)(x, k, plan=plan, values=values,
-                                              interpret=_interpret())
+    return registry.call("topk", plan.variant, x, k, plan=plan,
+                         values=values, interpret=_interpret())
 
 
 def segment_sort(keys, offsets, *, descending: bool = True, values=None,
@@ -253,8 +266,8 @@ def segment_sort(keys, offsets, *, descending: bool = True, values=None,
                else segments.static_cap(offsets, keys.shape[0]))
         plan = plan.replace(cap=cap)
     segments.validate_cap(offsets, plan.cap)
-    out = registry.get("segment_sort", plan.variant)(
-        keys, offsets, plan=plan, interpret=_interpret())
+    out = registry.call("segment_sort", plan.variant, keys, offsets,
+                        plan=plan, interpret=_interpret())
     if not descending:
         out = segments.reverse_segments(out, offsets, keys.shape[0])
     return out
@@ -280,9 +293,9 @@ def segment_argsort(keys, offsets, *, descending: bool = True, cap: int = 0,
                else segments.static_cap(offsets, keys.shape[0]))
         plan = plan.replace(cap=cap)
     segments.validate_cap(offsets, plan.cap)
-    return registry.get("segment_argsort", plan.variant)(
-        keys, offsets, plan=plan, descending=descending,
-        interpret=_interpret())
+    return registry.call("segment_argsort", plan.variant, keys, offsets,
+                         plan=plan, descending=descending,
+                         interpret=_interpret())
 
 
 def merge_runs(keys, run_offsets, *, descending: bool = True, values=None,
@@ -313,9 +326,9 @@ def merge_runs(keys, run_offsets, *, descending: bool = True, values=None,
     if tie is not None and tie != plan.tie:
         plan = plan.replace(tie=tie)
     if values is None and not stable:
-        return registry.get("merge_runs", plan.variant)(
-            keys, run_offsets, plan=plan, descending=descending,
-            interpret=_interpret())
+        return registry.call("merge_runs", plan.variant, keys,
+                             run_offsets, plan=plan, descending=descending,
+                             interpret=_interpret())
     assert tie != "skew", "tie='skew' is key-only (stable order has no ties)"
     from repro.engine.schedule import merge_runs as _sched_merge_runs
     # rank lanes leave no ties for skew to balance: pin the stable policy
@@ -347,8 +360,8 @@ def segment_merge(a, a_offsets, b, b_offsets, *, descending: bool = True,
             out, a_offsets + b_offsets, a.shape[0] + b.shape[0])
     plan = _resolve("segment_merge", plan, variant, a, a_offsets, b,
                     b_offsets)
-    return registry.get("segment_merge", plan.variant)(
-        a, a_offsets, b, b_offsets, plan=plan, interpret=_interpret())
+    return registry.call("segment_merge", plan.variant, a, a_offsets, b,
+                         b_offsets, plan=plan, interpret=_interpret())
 
 
 # --------------------------------------------------------------------------
@@ -382,8 +395,8 @@ def sharded_sort(x, mesh, axis: str = "data", *, payload=None,
     identically and stably (paper algorithm 3).
     """
     plan = _resolve("sharded_sort", plan, variant, x, mesh, axis)
-    return registry.get("sharded_sort", plan.variant)(
-        x, mesh, axis, plan=plan, interpret=_interpret(), payload=payload)
+    return registry.call("sharded_sort", plan.variant, x, mesh, axis,
+                         plan=plan, interpret=_interpret(), payload=payload)
 
 
 def sharded_topk(x, k: int, mesh, axis: str = "data", *, payload=None,
@@ -398,8 +411,8 @@ def sharded_topk(x, k: int, mesh, axis: str = "data", *, payload=None,
     with the payload riding the lanes end-to-end.
     """
     plan = _resolve("sharded_topk", plan, variant, x, k, mesh, axis)
-    return registry.get("sharded_topk", plan.variant)(
-        x, k, mesh, axis, plan=plan, interpret=_interpret(), payload=payload)
+    return registry.call("sharded_topk", plan.variant, x, k, mesh, axis,
+                         plan=plan, interpret=_interpret(), payload=payload)
 
 
 # --------------------------------------------------------------------------

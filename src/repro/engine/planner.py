@@ -188,23 +188,44 @@ class Planner:
             key = api.infer_key(op, *example_args)
         if candidates is None:
             candidates = candidate_plans(op, key)
+        from repro import obs
         bad = self._infeasible.setdefault(key, set())
         best, best_t = None, float("inf")
-        for plan in candidates:
-            if plan in bad:              # known-infeasible: skip, don't retry
-                continue
-            try:
-                t = _time(lambda: run(plan, *example_args), repeats=repeats)
-            except Exception:
-                # a raising candidate (e.g. a Pallas lowering failure at this
-                # shape) is recorded as infeasible; the tune carries on with
-                # the remaining candidates instead of aborting.
-                bad.add(plan)
-                continue
-            if t < best_t:
-                best, best_t = plan, t
+        with obs.span(f"autotune.{op}"):
+            for plan in candidates:
+                if plan in bad:          # known-infeasible: skip, don't retry
+                    obs.event("autotune.candidate", op=op, key=_key_str(key),
+                              variant=plan.variant, status="known_infeasible")
+                    continue
+                try:
+                    t = _time(lambda: run(plan, *example_args),
+                              repeats=repeats)
+                except Exception as e:
+                    # a raising candidate (e.g. a Pallas lowering failure at
+                    # this shape) is recorded as infeasible; the tune carries
+                    # on with the remaining candidates instead of aborting.
+                    bad.add(plan)
+                    obs.inc("autotune.infeasible")
+                    obs.event("autotune.candidate", op=op, key=_key_str(key),
+                              variant=plan.variant, status="infeasible",
+                              plan=plan.to_dict(),
+                              error=f"{type(e).__name__}: {e}"[:200])
+                    continue
+                obs.inc("autotune.measured")
+                obs.event("autotune.candidate", op=op, key=_key_str(key),
+                          variant=plan.variant, status="ok", us=t * 1e6,
+                          plan=plan.to_dict())
+                if t < best_t:
+                    best, best_t = plan, t
         if best is None:
             best = heuristic_plan(op, key)
+            obs.event("autotune.winner", op=op, key=_key_str(key),
+                      variant=best.variant, source="heuristic_fallback")
+        else:
+            obs.event("autotune.winner", op=op, key=_key_str(key),
+                      variant=best.variant, us=best_t * 1e6,
+                      plan=best.to_dict())
+        obs.inc("autotune.runs")
         self._plans[key] = best
         return best
 

@@ -37,6 +37,26 @@ def get(op: str, name: str) -> Callable:
             f"{sorted(_REGISTRY.get(op, {}))}") from None
 
 
+def call(op: str, name: str, *args, **kw):
+    """Dispatch ``op`` to variant ``name`` under the engine's observability
+    wrappers: a ``jax.named_scope`` labelling the variant in XLA profiler
+    traces (always on — trace-time only), and, when ``repro.obs`` is
+    enabled, an ``engine.<op>.<variant>`` span timer. ``obs.configure
+    (block=True)`` makes the span wait for device work so eager timings
+    measure execution rather than async dispatch."""
+    from repro import obs
+    fn = get(op, name)
+    label = f"repro.engine.{op}.{name}"
+    if not obs.enabled():
+        with jax.named_scope(label):
+            return fn(*args, **kw)
+    with obs.span(f"engine.{op}.{name}"), jax.named_scope(label):
+        out = fn(*args, **kw)
+        if obs.blocking():
+            out = jax.block_until_ready(out)
+        return out
+
+
 def variants(op: str):
     return tuple(sorted(_REGISTRY.get(op, {})))
 

@@ -43,6 +43,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.flims import next_pow2 as _next_pow2
 from repro.core.lanes import (INVALID_RANK, KEY, RANK, merge_lanes,
                               stable_compare)
@@ -193,14 +194,21 @@ def _xla_reduce(keys, offsets, ranks, m: int, descending: bool):
             unpad_bank(jnp.take_along_axis(rb, perm, axis=-1), goff, n))
 
 
-def _vmapped_reduce(keys, offsets, ranks, m: int, sched: MergeSchedule):
+def _vmapped_reduce(keys, offsets, ranks, m: int, sched: MergeSchedule,
+                    uniform_len: Optional[int] = None):
     """The per-level tree: one vmapped FLiMS lane merge per level (descending
     only — ``merge_runs`` mirrors ascending calls into this form)."""
     from repro.core.flims import flims_merge_ref, sentinel_for
     n = keys.shape[0]
     K = offsets.shape[0] - 1
     n_groups = K // m
-    ulen = _uniform_len(offsets)
+    # offsets created inside a jit trace are tracers even when their values
+    # are static (ambient tracing), so concreteness sniffing alone would
+    # silently fall through to the padded-bank path and pad EVERY run to
+    # next_pow2(total) — quadratic memory, and an int32-overflow crash at
+    # n = 2^20 with 2048 chunks. Callers that know the uniform run length
+    # statically (reduce_rows) pass it explicitly.
+    ulen = uniform_len if uniform_len is not None else _uniform_len(offsets)
     if ulen is not None:
         krows = keys.reshape(K, ulen)
         rrows = None if ranks is None else ranks.reshape(K, ulen)
@@ -257,6 +265,8 @@ def _pallas_reduce(keys, offsets, ranks, m: int, sched: MergeSchedule,
                                                segmented_merge_runs_kv)
     n = keys.shape[0]
     m2 = _next_pow2(m)
+    levels_total = m2.bit_length() - 1
+    passes = 0
     starts, lens = _pad_group_runs(offsets, m, m2)
     buf, rbuf = keys, ranks
     while m2 > 1:
@@ -265,33 +275,45 @@ def _pallas_reduce(keys, offsets, ranks, m: int, sched: MergeSchedule,
         # (G, C) block buffer stays O(n) even with many runs per pass
         groups = max(starts.shape[0] >> Lp, 1)
         bo = max(sched.w, min(sched.block_out, _next_pow2(-(-n // groups))))
-        if Lp == 1:
-            if rbuf is None:
-                buf = segmented_merge_runs(
-                    buf, buf, starts[0::2], lens[0::2], starts[1::2],
-                    lens[1::2], n_out=n, w=sched.w, block_out=bo,
-                    interpret=interpret)
+        passes += 1
+        obs.event("schedule.pass", executor="tree_pallas", levels=int(Lp),
+                  runs=int(starts.shape[0]), n=int(n), block_out=int(bo),
+                  kv=rbuf is not None)
+        with jax.named_scope(f"repro.schedule.pass_L{Lp}"):
+            if Lp == 1:
+                if rbuf is None:
+                    buf = segmented_merge_runs(
+                        buf, buf, starts[0::2], lens[0::2], starts[1::2],
+                        lens[1::2], n_out=n, w=sched.w, block_out=bo,
+                        interpret=interpret)
+                else:
+                    buf, rbuf = segmented_merge_runs_kv(
+                        buf, rbuf, buf, rbuf, starts[0::2], lens[0::2],
+                        starts[1::2], lens[1::2], n_out=n, w=sched.w,
+                        block_out=bo, descending=descending,
+                        interpret=interpret)
             else:
-                buf, rbuf = segmented_merge_runs_kv(
-                    buf, rbuf, buf, rbuf, starts[0::2], lens[0::2],
-                    starts[1::2], lens[1::2], n_out=n, w=sched.w,
-                    block_out=bo, descending=descending,
-                    interpret=interpret)
-        else:
-            if rbuf is None:
-                buf = merge_tree_runs(
-                    buf, starts, lens, group=1 << Lp, n_out=n, w=sched.w,
-                    block_out=bo, interpret=interpret)
-            else:
-                buf, rbuf = merge_tree_runs_kv(
-                    buf, rbuf, starts, lens, group=1 << Lp, n_out=n,
-                    w=sched.w, block_out=bo, descending=descending,
-                    interpret=interpret)
+                if rbuf is None:
+                    buf = merge_tree_runs(
+                        buf, starts, lens, group=1 << Lp, n_out=n, w=sched.w,
+                        block_out=bo, interpret=interpret)
+                else:
+                    buf, rbuf = merge_tree_runs_kv(
+                        buf, rbuf, starts, lens, group=1 << Lp, n_out=n,
+                        w=sched.w, block_out=bo, descending=descending,
+                        interpret=interpret)
         lens = lens.reshape(-1, 1 << Lp).sum(axis=1).astype(jnp.int32)
         starts = jnp.concatenate(
             [jnp.zeros((1,), jnp.int32),
              jnp.cumsum(lens)[:-1]]).astype(jnp.int32)
         m2 >>= Lp
+    # the per-level tree would have taken `levels_total` HBM round trips;
+    # the fused passes took `passes` — the difference is the saving this
+    # schedule bought (PR 3's whole point, now observable).
+    obs.event("schedule.reduce", executor="tree_pallas", passes=passes,
+              levels_total=levels_total,
+              hbm_trips_saved=levels_total - passes, n=int(n),
+              kv=ranks is not None)
     return buf if rbuf is None else (buf, rbuf)
 
 
@@ -301,7 +323,7 @@ def _pallas_reduce(keys, offsets, ranks, m: int, sched: MergeSchedule,
 
 def merge_runs(keys, offsets, *, ranks=None, schedule: MergeSchedule,
                runs_per_group: Optional[int] = None, descending: bool = True,
-               interpret: bool = True):
+               interpret: bool = True, uniform_len: Optional[int] = None):
     """Reduce grouped contiguous sorted runs to one sorted run per group.
 
     ``keys`` is the flat concatenation of ``R`` runs with boundaries
@@ -331,15 +353,25 @@ def merge_runs(keys, offsets, *, ranks=None, schedule: MergeSchedule,
             keys, ranks = _mirror(keys, offsets, ranks)
             out = merge_runs(keys, offsets, ranks=ranks, schedule=sched,
                              runs_per_group=m, descending=True,
-                             interpret=interpret)
+                             interpret=interpret, uniform_len=uniform_len)
             goff = offsets[::m]               # group boundaries survive
             return (_unmirror(out, None, goff) if ranks is None
                     else _unmirror(out[0], out[1], goff))
 
+    levels_total = _next_pow2(m).bit_length() - 1
     if sched.variant == "xla":
-        return _xla_reduce(keys, offsets, ranks, m, descending)
+        obs.event("schedule.reduce", executor="xla", passes=1,
+                  levels_total=levels_total, hbm_trips_saved=levels_total - 1,
+                  n=int(n), kv=ranks is not None)
+        with jax.named_scope("repro.schedule.xla_reduce"):
+            return _xla_reduce(keys, offsets, ranks, m, descending)
     if sched.variant == "tree_vmapped":
-        return _vmapped_reduce(keys, offsets, ranks, m, sched)
+        obs.event("schedule.reduce", executor="tree_vmapped",
+                  passes=levels_total, levels_total=levels_total,
+                  hbm_trips_saved=0, n=int(n), kv=ranks is not None)
+        with jax.named_scope("repro.schedule.vmapped_reduce"):
+            return _vmapped_reduce(keys, offsets, ranks, m, sched,
+                                   uniform_len=uniform_len)
     return _pallas_reduce(keys, offsets, ranks, m, sched, descending,
                           interpret)
 
@@ -357,4 +389,5 @@ def reduce_rows(rows, *, schedule: MergeSchedule, ranks=None,
     return merge_runs(rows.reshape(-1), offsets,
                       ranks=None if ranks is None else ranks.reshape(-1),
                       schedule=schedule, runs_per_group=runs_per_group,
-                      descending=descending, interpret=interpret)
+                      descending=descending, interpret=interpret,
+                      uniform_len=n)

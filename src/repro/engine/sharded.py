@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.engine.planner import Plan
 from repro.engine.schedule import MergeSchedule
 
@@ -195,8 +196,20 @@ def _exchange_merge(loc, ploc, bounds, sizes, *, cap: int, out_cap: int,
     return grow_tail(merged, sent), pmerged, total
 
 
+def _emit_exec(rung, need, overflow, *, caps: tuple):
+    """Host-side sink for the in-graph rung decision (``jax.debug.callback``
+    target): the ladder rung the ``lax.switch`` took, the pmax'd needed cap,
+    and the overflow flag — one event per participating device."""
+    r = int(rung)
+    ovf = bool(overflow)
+    obs.event("sharded.exec", rung=r, cap=int(caps[min(r, len(caps) - 1)]),
+              need=int(need), overflow=ovf, rungs=len(caps))
+    obs.inc("sharded.overflow" if ovf else "sharded.ok")
+
+
 def _sharded_pass(xl, payload, *, axis_name: str, n_dev: int, caps: tuple,
-                  w: int, sched: MergeSchedule, splitter: str):
+                  w: int, sched: MergeSchedule, splitter: str,
+                  record: bool = False):
     """The whole per-device pipeline: local sort, splitters, bucket sizes,
     then the in-graph overflow-recovery switch over the cap ladder."""
     loc, ploc = _local_sort(xl, payload, w)
@@ -214,12 +227,18 @@ def _sharded_pass(xl, payload, *, axis_name: str, n_dev: int, caps: tuple,
                         axis_name=axis_name, n_dev=n_dev, sched=sched)
                 for c in caps]
     if len(branches) == 1:
+        rung = jnp.zeros((), jnp.int32)
         merged, pmerged, total = branches[0](loc, ploc, bounds, sizes)
     else:
         rung = jnp.minimum(jnp.sum(need > jnp.asarray(caps, sizes.dtype)),
                            len(caps) - 1).astype(jnp.int32)
         merged, pmerged, total = lax.switch(rung, branches, loc, ploc,
                                             bounds, sizes)
+    if record:
+        # report the branch that actually EXECUTED, not a trace-time guess —
+        # the one decision span timers and trace-time events cannot see
+        jax.debug.callback(partial(_emit_exec, caps=caps), rung, need,
+                           overflow[0])
     res = ShardedSort(merged, total, overflow)
     return res if payload is None else (res, pmerged)
 
@@ -229,34 +248,42 @@ def _sharded_pass(xl, payload, *, axis_name: str, n_dev: int, caps: tuple,
 # --------------------------------------------------------------------------
 
 def _pass_kwargs(x, mesh, axis: str, plan: Plan, kv: bool,
-                 schedule: Optional[MergeSchedule] = None) -> dict:
+                 schedule: Optional[MergeSchedule] = None,
+                 record: bool = False) -> dict:
     n_dev = mesh.shape[axis]
     n_local = x.shape[0] // n_dev
     sched = schedule or MergeSchedule.from_plan(plan)
     if kv:
         sched = sched.replace(tie="b")   # rank lanes leave no ties for skew
     assert plan.splitter in SPLITTER_POLICIES, plan.splitter
-    return dict(axis_name=axis, n_dev=n_dev,
-                caps=cap_ladder(n_local, n_dev, plan.cap_factor,
-                                plan.retries),
-                w=plan.w, sched=sched, splitter=plan.splitter)
+    caps = cap_ladder(n_local, n_dev, plan.cap_factor, plan.retries)
+    # trace-time record of the static degrees of freedom: one event per
+    # compilation (re-traced when obs is toggled, via the `record` static)
+    obs.event("sharded.plan", n_local=n_local, n_dev=n_dev, axis=axis,
+              caps=list(caps), splitter=plan.splitter,
+              executor=sched.variant, levels=sched.levels_per_pass,
+              kv=kv, w=plan.w)
+    return dict(axis_name=axis, n_dev=n_dev, caps=caps,
+                w=plan.w, sched=sched, splitter=plan.splitter, record=record)
 
 
-@partial(jax.jit, static_argnames=("mesh", "axis", "plan", "schedule"))
-def _sorted_keys(x, mesh, axis, plan, schedule=None):
+@partial(jax.jit,
+         static_argnames=("mesh", "axis", "plan", "schedule", "record"))
+def _sorted_keys(x, mesh, axis, plan, schedule=None, record=False):
     fn = partial(_sharded_pass, payload=None,
                  **_pass_kwargs(x, mesh, axis, plan, kv=False,
-                                schedule=schedule))
+                                schedule=schedule, record=record))
     return jax.shard_map(fn, mesh=mesh, in_specs=P(axis),
                          out_specs=ShardedSort(P(axis), P(axis), P(axis)),
                          check_vma=False)(x)
 
 
-@partial(jax.jit, static_argnames=("mesh", "axis", "plan", "schedule"))
-def _sorted_kv(x, payload, mesh, axis, plan, schedule=None):
+@partial(jax.jit,
+         static_argnames=("mesh", "axis", "plan", "schedule", "record"))
+def _sorted_kv(x, payload, mesh, axis, plan, schedule=None, record=False):
     fn = partial(_sharded_pass,
                  **_pass_kwargs(x, mesh, axis, plan, kv=True,
-                                schedule=schedule))
+                                schedule=schedule, record=record))
     pspec = jax.tree.map(lambda _: P(axis), payload)
     return jax.shard_map(
         fn, mesh=mesh, in_specs=(P(axis), pspec),
@@ -280,9 +307,10 @@ def run_sharded_sort(x, mesh, axis: str = "data", *, payload=None,
     schedule keeps its own tiles.
     """
     plan = plan or Plan("tree_vmapped")
-    if payload is None:
-        return _sorted_keys(x, mesh, axis, plan, schedule)
-    return _sorted_kv(x, payload, mesh, axis, plan, schedule)
+    record = obs.enabled()       # static: toggling obs re-traces with the
+    if payload is None:          # rung callback staged in (or out) cleanly
+        return _sorted_keys(x, mesh, axis, plan, schedule, record)
+    return _sorted_kv(x, payload, mesh, axis, plan, schedule, record)
 
 
 # --------------------------------------------------------------------------

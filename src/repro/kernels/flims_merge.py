@@ -28,6 +28,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.flims import sentinel_for
 from repro.core.lanes import INVALID_RANK
 
+from repro import obs
+
 
 def plus_inf_for(dtype):
     """Key that sorts first in descending order (never strictly loses)."""
@@ -153,6 +155,7 @@ def _corank(o, a, b):
 
 @functools.partial(jax.jit,
                    static_argnames=("w", "block_out", "interpret"))
+@obs.scoped("kernels.flims_merge")
 def flims_merge_pallas(a: jnp.ndarray, b: jnp.ndarray, *, w: int = 128,
                        block_out: int = 4096, interpret: bool = True):
     """Merge two descending 1-D arrays with the partitioned FLiMS kernel."""
@@ -323,6 +326,7 @@ def _corank_kv(o, a, ra, b, rb, descending: bool = True):
 
 @functools.partial(jax.jit, static_argnames=("w", "block_out", "descending",
                                              "interpret"))
+@obs.scoped("kernels.flims_merge_kv")
 def flims_merge_kv_pallas(a, ra, b, rb, *, w: int = 128,
                           block_out: int = 4096, descending: bool = True,
                           interpret: bool = True):

@@ -47,6 +47,7 @@ from repro.core.lanes import INVALID_RANK
 from repro.kernels.flims_merge import (_butterfly_desc, _butterfly_kv,
                                        bound_keys, element_block_spec,
                                        lane_first)
+from repro import obs
 
 _RANK_LO = jnp.iinfo(jnp.int32).min
 
@@ -370,6 +371,7 @@ def _merge_tree_call(buf, ranks, starts, lens, *, group: int, n_out: int,
 
 @functools.partial(jax.jit, static_argnames=("group", "n_out", "w",
                                              "block_out", "interpret"))
+@obs.scoped("kernels.merge_tree")
 def merge_tree_runs(buf, starts, lens, *, group: int, n_out: int, w: int = 32,
                     block_out: int = 1024, interpret: bool = True):
     """Merge consecutive groups of ``group = 2^L`` descending runs — run ``r``
@@ -386,6 +388,7 @@ def merge_tree_runs(buf, starts, lens, *, group: int, n_out: int, w: int = 32,
 @functools.partial(jax.jit, static_argnames=("group", "n_out", "w",
                                              "block_out", "descending",
                                              "interpret"))
+@obs.scoped("kernels.merge_tree_kv")
 def merge_tree_runs_kv(buf, ranks, starts, lens, *, group: int, n_out: int,
                        w: int = 32, block_out: int = 1024,
                        descending: bool = True, interpret: bool = True):

@@ -16,6 +16,8 @@ from repro.core.lanes import INVALID_RANK
 from repro.kernels.bitonic_sort import sort_chunks_kv_pallas, sort_chunks_pallas
 from repro.kernels.flims_merge import bound_keys, flims_merge_pallas
 
+from repro import obs
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
@@ -36,6 +38,7 @@ def sort_rows(x: jnp.ndarray, *, rows_per_block: int = 8) -> jnp.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("chunk", "w", "descending",
                                              "levels"))
+@obs.scoped("kernels.kernel_sort")
 def kernel_sort(x: jnp.ndarray, *, chunk: int = 512, w: int = 128,
                 descending: bool = True, levels: int = 2) -> jnp.ndarray:
     """Full sort of a 1-D array: chunk kernel + fused FLiMS merge-tree passes.
@@ -70,6 +73,7 @@ def kernel_sort(x: jnp.ndarray, *, chunk: int = 512, w: int = 128,
 
 @functools.partial(jax.jit, static_argnames=("chunk", "w", "descending",
                                              "interpret", "levels"))
+@obs.scoped("kernels.kernel_argsort")
 def kernel_argsort(keys: jnp.ndarray, *, chunk: int = 256, w: int = 32,
                    descending: bool = True, interpret: bool = None,
                    levels: int = 2) -> jnp.ndarray:

@@ -38,6 +38,7 @@ from repro.kernels.bitonic_sort import (_bitonic_rows_desc, _sort_kv_kernel,
 from repro.kernels.flims_merge import (_merge_kernel, _merge_kv_kernel,
                                        bound_keys, element_block_spec,
                                        lane_first, plus_inf_for)
+from repro import obs
 
 
 def padded_bank(values, offsets, cap: int, fill=None):
@@ -135,6 +136,7 @@ def _corank_runs(o, la, lb, astart, bstart, a, b, steps: int):
 
 @functools.partial(jax.jit,
                    static_argnames=("n_out", "w", "block_out", "interpret"))
+@obs.scoped("kernels.segmented_merge_runs")
 def segmented_merge_runs(a, b, a_starts, a_lens, b_starts, b_lens, *,
                          n_out: int, w: int = 32, block_out: int = 1024,
                          interpret: bool = True):
@@ -221,6 +223,7 @@ def segmented_merge_runs(a, b, a_starts, a_lens, b_starts, b_lens, *,
 
 
 @functools.partial(jax.jit, static_argnames=("w", "block_out", "interpret"))
+@obs.scoped("kernels.segmented_merge")
 def segmented_merge_pallas(a, a_offsets, b, b_offsets, *, w: int = 32,
                            block_out: int = 1024, interpret: bool = True):
     """Merge S segment pairs described by offset vectors, one ``pallas_call``.
@@ -292,6 +295,7 @@ def _corank_runs_kv(o, la, lb, astart, bstart, a, ra, b, rb, steps: int,
 @functools.partial(jax.jit,
                    static_argnames=("n_out", "w", "block_out", "descending",
                                     "interpret"))
+@obs.scoped("kernels.segmented_merge_runs_kv")
 def segmented_merge_runs_kv(a, ra, b, rb, a_starts, a_lens, b_starts, b_lens,
                             *, n_out: int, w: int = 32, block_out: int = 1024,
                             descending: bool = True, interpret: bool = True):
@@ -394,6 +398,7 @@ def _sort_row_kernel(x_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("cap", "interpret"))
+@obs.scoped("kernels.segment_sort")
 def segment_sort_pallas(values, offsets, *, cap: int = 0,
                         interpret: bool = True):
     """Sort every segment of a ragged batch descending in ONE ``pallas_call``.
@@ -432,6 +437,7 @@ def segment_sort_pallas(values, offsets, *, cap: int = 0,
 @functools.partial(jax.jit,
                    static_argnames=("cap", "chunk", "w", "levels",
                                     "interpret"))
+@obs.scoped("kernels.segment_sort_two_phase")
 def segment_sort_two_phase(values, offsets, *, cap: int, chunk: int = 256,
                            w: int = 32, levels: int = 1,
                            interpret: bool = True):
@@ -489,6 +495,7 @@ def _rank_bank(offsets, cap: int):
 
 
 @functools.partial(jax.jit, static_argnames=("cap", "descending", "interpret"))
+@obs.scoped("kernels.segment_sort_kv")
 def segment_sort_kv_pallas(keys, offsets, *, cap: int = 0,
                            descending: bool = True, interpret: bool = True):
     """Fused stable KV segment sort: ONE ``pallas_call`` carrying key and
@@ -525,6 +532,7 @@ def segment_sort_kv_pallas(keys, offsets, *, cap: int = 0,
 
 
 @functools.partial(jax.jit, static_argnames=("cap", "descending", "interpret"))
+@obs.scoped("kernels.segment_argsort")
 def segment_argsort_pallas(keys, offsets, *, cap: int = 0,
                            descending: bool = True, interpret: bool = True):
     """Stable per-segment argsort (fused strategy): local permutation only."""
@@ -537,6 +545,7 @@ def segment_argsort_pallas(keys, offsets, *, cap: int = 0,
 @functools.partial(jax.jit,
                    static_argnames=("cap", "chunk", "w", "descending",
                                     "levels", "interpret"))
+@obs.scoped("kernels.segment_argsort_two_phase")
 def segment_argsort_two_phase(keys, offsets, *, cap: int, chunk: int = 256,
                               w: int = 32, descending: bool = True,
                               levels: int = 1, interpret: bool = True):

@@ -20,6 +20,13 @@ PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
 
+#: main-memory streaming bandwidth per backend (bytes/s) — the roofline
+#: ceiling benchmark rows are reported against. TPU v5e HBM per the hardware
+#: model above; the CPU/GPU figures are coarse container-class estimates
+#: (dual-channel DDR host, A100-class HBM2e) so off-TPU rows still carry a
+#: meaningful achieved-vs-peak fraction.
+MEM_BW_BY_BACKEND = {"tpu": HBM_BW, "gpu": 1.6e12, "cpu": 40e9}
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
@@ -31,6 +38,54 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
 
 _SHAPE_RE = re.compile(r"\b(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|"
                        r"[su](?:4|8|16|32|64)|c64|c128)\[([\d,]*)\]")
+
+
+def mem_bw(backend: Optional[str] = None) -> float:
+    """Streaming-memory bandwidth ceiling (bytes/s) for a backend (the
+    current jax backend by default) — the denominator of every achieved-GB/s
+    fraction the benchmarks report."""
+    if backend is None:
+        import jax
+        backend = jax.default_backend()
+    return MEM_BW_BY_BACKEND.get(backend, HBM_BW)
+
+
+# --------------------------------------------------------------------------
+# streaming-traffic models for the sort/merge benchmarks (DESIGN.md §7.3):
+# a merge pass reads and writes every element once, so the minimal traffic
+# of a K-run reduction is 2·n·itemsize per pass — the roofline bound a
+# measured row is compared against.
+# --------------------------------------------------------------------------
+
+def stream_bytes(n_elems: int, itemsize: int, passes: int = 1) -> int:
+    """Bytes moved by ``passes`` read+write streaming passes over the data."""
+    return 2 * n_elems * itemsize * passes
+
+
+def merge_tree_passes(n_runs: int, levels_per_pass: int = 1) -> int:
+    """HBM round trips to reduce ``n_runs`` sorted runs: ``ceil(log2 K)``
+    tree levels, ``levels_per_pass`` of them fused per pass (the
+    MergeSchedule dof). One-shot executors (``xla``) count as one pass."""
+    import math
+    if n_runs <= 1:
+        return 0
+    levels = math.ceil(math.log2(n_runs))
+    return -(-levels // max(levels_per_pass, 1))
+
+
+def sort_stream_bytes(n: int, itemsize: int, chunk: int,
+                      levels_per_pass: int = 1) -> int:
+    """Minimal streaming traffic of a two-level sort: one chunk-sort pass
+    plus the merge-tree reduction of ``n/chunk`` runs."""
+    runs = max(-(-n // max(chunk, 1)), 1)
+    return stream_bytes(n, itemsize,
+                        1 + merge_tree_passes(runs, levels_per_pass))
+
+
+def bound_us(n_bytes: float, backend: Optional[str] = None) -> float:
+    """Roofline lower bound (µs) for moving ``n_bytes`` at the backend's
+    streaming bandwidth."""
+    return n_bytes / mem_bw(backend) * 1e6
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:

@@ -23,7 +23,8 @@ from repro.models.model import build_model, sample_topk
 
 
 def serve(cfg, batch: int, prompt_len: int, gen: int, max_seq: int = 0,
-          use_flims_topk: bool = None, seed: int = 0, topk: int = 16):
+          use_flims_topk: bool = None, seed: int = 0, topk: int = 16,
+          stats_every: int = 0):
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
     params = model.init(key)
@@ -61,13 +62,24 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, max_seq: int = 0,
 
     tok = prompts[:, -1]
     out = []
+    window = []                 # per-step wall times for the --stats line
     t0 = time.time()
     for t in range(gen):
+        ts = time.perf_counter()
         key, sk = jax.random.split(key)
         tok, cache = step(params, tok,
                           jnp.full((batch,), start_pos + t, jnp.int32),
                           cache, sk)
-        out.append(np.asarray(tok))
+        out.append(np.asarray(tok))    # np.asarray blocks: full-step latency
+        if stats_every:
+            window.append(time.perf_counter() - ts)
+            if (t + 1) % stats_every == 0:
+                from repro import obs
+                from repro.obs.reporting import stats_line
+                snap = obs.snapshot(kinds=("counters",))
+                print(stats_line(t + 1, window, batch,
+                                 snap.get("counters", {})), flush=True)
+                window.clear()
     dt = time.time() - t0
     toks = np.stack(out, axis=1)
     return toks, dt
@@ -92,6 +104,10 @@ def main(argv=None):
                     help="write the engine's plan table (autotuned or "
                          "resolved during this run) back to JSON, so it "
                          "round-trips into a later --plans")
+    ap.add_argument("--stats", type=int, default=0, metavar="N",
+                    help="enable repro.obs and print a [stats] line every N "
+                         "decode steps (latency p50/p99, tok/s, plan-cache "
+                         "counters), plus a final obs report")
     args = ap.parse_args(argv)
     cfg = get_config(args.arch)
     if args.reduced:
@@ -104,11 +120,18 @@ def main(argv=None):
         use_flims = False
     elif args.flims_topk:
         use_flims = True
+    if args.stats:
+        from repro import obs
+        obs.enable()
     toks, dt = serve(cfg, args.batch, args.prompt_len, args.gen,
-                     use_flims_topk=use_flims, topk=args.topk)
+                     use_flims_topk=use_flims, topk=args.topk,
+                     stats_every=args.stats)
     print(f"[serve] generated {toks.shape} tokens in {dt:.2f}s "
           f"({toks.shape[0] * toks.shape[1] / dt:.1f} tok/s)")
     print(toks[:2, :16])
+    if args.stats:
+        from repro import obs
+        print(obs.report())
     if args.save_plans:
         from repro import engine
         engine.save_plans(args.save_plans)

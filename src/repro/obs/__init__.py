@@ -1,0 +1,192 @@
+"""``repro.obs`` — the engine's flight recorder (DESIGN.md §7).
+
+A lightweight tracing/metrics layer threaded through every engine layer:
+plan resolution, autotuning, the Pallas kernel variants, MergeSchedule
+passes, and the sharded exchange. **Disabled by default and free when
+disabled**: every instrumentation site checks one module-level flag before
+touching anything, and the decision-heavy sites live in host dispatch code
+that jitted steady-state calls never re-run.
+
+    from repro import obs
+
+    obs.enable()
+    engine.sort(x)                     # decisions now recorded
+    snap = obs.snapshot()              # JSON-clean dict
+    print(obs.report())                # human-readable rendering
+    obs.disable()
+
+What gets recorded (the event taxonomy — DESIGN.md §7.1):
+
+- ``plan.resolve``        cache hit / heuristic fallback / explicit plan
+- ``autotune.candidate``  one per measured candidate, incl. infeasible ones
+- ``autotune.winner``     the installed plan and its median time
+- ``schedule.pass``       each fused merge-tree pass (executor, levels, runs)
+- ``schedule.reduce``     one per reduction: passes vs tree levels (the HBM
+  round trips a fused schedule saved)
+- ``sharded.plan``        the cap ladder, splitter policy, and executor
+- ``sharded.exec``        the cap-ladder rung the ``lax.switch`` actually
+  took, the pmax'd needed cap, and the overflow flag (via
+  ``jax.debug.callback`` — one event per participating device)
+
+Span timers (``obs.span``) record host wall time into bounded histograms
+and, when a profiler is attached, open a ``jax.profiler.TraceAnnotation``
+so the region is visible in the trace viewer; ``jax.named_scope`` labels on
+every registry dispatch and kernel entry make the pallas_call variants
+identifiable in XLA profiles regardless of the enabled flag.
+
+Trace-time semantics: events fired from inside traced code (plan lookup
+under ``jit``, schedule passes) are emitted when the decision is MADE —
+i.e. at trace time, once per compilation, not once per executed call.
+The sharded rung event is the exception: it reports the executed branch via
+a debug callback, so it fires per run (and per device under ``shard_map``).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Callable, Optional
+
+from repro.obs.metrics import Registry, percentile, plain
+
+__all__ = [
+    "enable", "disable", "enabled", "blocking", "configure",
+    "inc", "gauge", "observe", "event", "on", "span", "kernel_scope",
+    "scoped", "snapshot", "report", "reset", "registry", "percentile",
+    "plain",
+]
+
+#: the process-wide registry every instrumentation site writes to
+registry = Registry()
+
+_enabled = False
+_block = False
+
+
+def configure(*, block: Optional[bool] = None) -> None:
+    """Tune recording behaviour. ``block=True`` makes ``span`` wait for the
+    spanned op's device work (``jax.block_until_ready``) so eager span
+    timings measure execution, not async dispatch; leave False for
+    dispatch-latency semantics and zero interference."""
+    global _block
+    if block is not None:
+        _block = bool(block)
+
+
+def enable(*, block: Optional[bool] = None) -> None:
+    global _enabled
+    _enabled = True
+    configure(block=block)
+
+
+def disable() -> None:
+    global _enabled, _block
+    _enabled = False
+    _block = False
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def blocking() -> bool:
+    return _enabled and _block
+
+
+# --------------------------------------------------------------------------
+# fast-path write API: one flag check, then the registry
+# --------------------------------------------------------------------------
+
+def inc(name: str, n: int = 1) -> None:
+    if _enabled:
+        registry.inc(name, n)
+
+
+def gauge(name: str, value) -> None:
+    if _enabled:
+        registry.set_gauge(name, value)
+
+
+def observe(name: str, seconds: float) -> None:
+    if _enabled:
+        registry.observe(name, seconds)
+
+
+def event(kind: str, **data) -> None:
+    if _enabled:
+        registry.event(kind, **data)
+
+
+def on(kind: str, fn: Callable) -> Callable:
+    """Subscribe ``fn(event_dict)`` to events of ``kind`` ('*' for all).
+    Subscriptions are independent of the enabled flag (events only fire
+    while enabled)."""
+    return registry.on(kind, fn)
+
+
+@contextlib.contextmanager
+def span(name: str):
+    """Host wall-time span: records into the ``name`` timer histogram and
+    annotates the region for the profiler. No-op (and no timestamps taken)
+    while disabled."""
+    if not _enabled:
+        yield
+        return
+    ctx = contextlib.nullcontext()
+    try:
+        from jax.profiler import TraceAnnotation
+        ctx = TraceAnnotation(name)
+    except Exception:
+        pass
+    t0 = time.perf_counter()
+    try:
+        with ctx:
+            yield
+    finally:
+        registry.observe(name, time.perf_counter() - t0)
+
+
+def kernel_scope(name: str):
+    """``jax.named_scope`` labelling a kernel entry point so its ops (and
+    pallas_calls) are identifiable in XLA profiler traces. Always on — the
+    label only exists at trace time and costs nothing at run time."""
+    import jax
+    return jax.named_scope(f"repro.{name}")
+
+
+def scoped(name: str):
+    """Decorator form of ``kernel_scope``: every call to the wrapped
+    function traces under ``repro.<name>``."""
+    import functools
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            with kernel_scope(name):
+                return fn(*args, **kw)
+        return wrapper
+    return deco
+
+
+# --------------------------------------------------------------------------
+# reporting
+# --------------------------------------------------------------------------
+
+def snapshot(kinds: Optional[tuple] = None) -> dict:
+    """One JSON-clean dict of everything recorded so far: counters, gauges,
+    timer summaries (count/total/p50/p99/max in µs), and the event ring
+    (optionally filtered to ``kinds``). Round-trips through ``json``."""
+    snap = registry.snapshot(kinds)
+    snap["enabled"] = _enabled
+    return snap
+
+
+def report(snap: Optional[dict] = None) -> str:
+    """Human-readable rendering of a snapshot (current one by default)."""
+    from repro.obs.reporting import render_report
+    return render_report(snap if snap is not None else snapshot())
+
+
+def reset() -> None:
+    """Clear every counter, gauge, timer, and event (the enabled flag and
+    subscriptions survive)."""
+    registry.reset()

@@ -8,6 +8,7 @@ runs. Plus the fused merge-tree kernel directly, the any-K PMT wrappers,
 skew tie plumbing, and schedule-field persistence.
 """
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -315,3 +316,50 @@ def test_autotune_merge_runs_installs_plan():
     got = np.array(engine.merge_runs(jnp.array(buf), jnp.array(offs)))
     np.testing.assert_array_equal(got, np.sort(buf)[::-1])
     engine.clear_plans()
+
+
+# --------------------------------------------------------------------------
+# regression: reduce_rows under jit must not fall off the uniform fast path
+# --------------------------------------------------------------------------
+
+def test_reduce_rows_uniform_fast_path_under_jit():
+    """Inside a jit trace the arange-built offsets are tracers (ambient
+    tracing), so concreteness sniffing alone sent the vmapped tree down the
+    padded-bank path — padding every run to next_pow2(total): quadratic
+    memory and an int32-overflow crash at n=2^20/chunk=512. reduce_rows now
+    passes the statically-known uniform run length through explicitly."""
+    from repro.engine.schedule import MergeSchedule, reduce_rows
+
+    K, n = 64, 32
+    rng = np.random.default_rng(11)
+    rows = np.sort(rng.integers(-99, 99, (K, n)).astype(np.int32),
+                   axis=1)[:, ::-1].copy()
+
+    calls = []
+    import repro.engine.schedule as sch
+    orig = sch._vmapped_reduce
+
+    def spy(keys, offsets, ranks, m, sched, uniform_len=None):
+        calls.append(uniform_len)
+        return orig(keys, offsets, ranks, m, sched, uniform_len=uniform_len)
+
+    sch._vmapped_reduce = spy
+    try:
+        out = jax.jit(lambda r: reduce_rows(
+            r, schedule=MergeSchedule("tree_vmapped", w=16)))(jnp.array(rows))
+    finally:
+        sch._vmapped_reduce = orig
+    np.testing.assert_array_equal(np.array(out),
+                                  np.sort(rows.reshape(-1))[::-1])
+    assert calls == [n], "reduce_rows must pass its static uniform_len"
+
+
+def test_flims_sort_large_n_no_padded_bank_blowup():
+    """flims_sort at a size where the padded-bank fallback used to overflow
+    int32 index bounds (2^17 keeps CI fast; the blowup was size-independent
+    in kind, n=2^20 in degree)."""
+    from repro.core import flims_sort
+    n = 1 << 17
+    x = np.random.default_rng(12).integers(-2**31, 2**31 - 1, n)
+    out = flims_sort(jnp.array(x.astype(np.int32)), chunk=512, w=64)
+    np.testing.assert_array_equal(np.array(out), np.sort(x)[::-1])
