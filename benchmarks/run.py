@@ -47,9 +47,9 @@ def main(argv=None) -> None:
                          "(CI passes its own; defaults to now, UTC)")
     args = ap.parse_args(argv)
 
-    from benchmarks import (argsort_bench, fig14_w_sweep, fig15_full_sort,
-                            kernel_merge, merge_tree_bench, moe_dispatch,
-                            sharded_sort_bench, skew_balance,
+    from benchmarks import (argsort_bench, external_sort_bench, fig14_w_sweep,
+                            fig15_full_sort, kernel_merge, merge_tree_bench,
+                            moe_dispatch, sharded_sort_bench, skew_balance,
                             table2_comparators)
     sections = [(table2_comparators, "Table 2 (comparator counts)"),
                 (fig14_w_sweep, "Fig 14 (throughput vs w)"),
@@ -59,7 +59,8 @@ def main(argv=None) -> None:
                 (kernel_merge, "Pallas kernels (interpret)"),
                 (argsort_bench, "Argsort variants (payload lanes)"),
                 (moe_dispatch, "MoE dispatch via repro.engine"),
-                (sharded_sort_bench, "S8.2 (sharded sample sort, 8 devices)")]
+                (sharded_sort_bench, "S8.2 (sharded sample sort, 8 devices)"),
+                (external_sort_bench, "DESIGN §8 (out-of-core external sort)")]
     if args.only:
         keys = [s.strip() for s in args.only.split(",") if s.strip()]
         sections = [(m, l) for m, l in sections

@@ -79,6 +79,18 @@ def main(argv=None) -> int:
     base = load_rows(args.baseline)
     fresh = load_rows(args.fresh)
 
+    # rows carrying an ``exact`` oracle column (the external-sort section)
+    # must have passed it — a correctness miss fails the gate regardless of
+    # timing thresholds or --allow-missing
+    inexact = [k for k, r in sorted(fresh.items())
+               if r.get("derived", {}).get("exact") is False]
+    if inexact:
+        for key in inexact:
+            print(f"[perf_check] ORACLE MISMATCH: {key}")
+        print(f"[perf_check] FAIL: {len(inexact)} rows failed their "
+              f"bit-for-bit oracle check")
+        return 1
+
     only_base = sorted(set(base) - set(fresh))
     only_fresh = sorted(set(fresh) - set(base))
     for key in only_base:

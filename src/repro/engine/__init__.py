@@ -6,10 +6,10 @@ The single production entry point for sorting workloads (DESIGN.md §3):
 autotunable variant/parameter cache.
 """
 from repro.engine.api import (MergeSchedule, Plan, argsort, autotune,
-                              clear_plans, load_plans, merge, merge_runs,
-                              save_plans, segment_argsort, segment_merge,
-                              segment_sort, sharded_sort, sharded_topk,
-                              sort, topk)
+                              clear_plans, external_sort, load_plans, merge,
+                              merge_runs, save_plans, segment_argsort,
+                              segment_merge, segment_sort, sharded_sort,
+                              sharded_topk, sort, topk)
 from repro.engine.planner import (Planner, default_planner, heuristic_plan,
                                   plan_key)
 from repro.engine.segments import (lengths_from_offsets, offsets_from_lengths,
@@ -20,7 +20,7 @@ from repro.engine import registry, schedule, sharded
 
 __all__ = [
     "MergeSchedule", "Plan", "Planner", "ShardedSort", "argsort", "autotune",
-    "clear_plans", "default_planner", "heuristic_plan",
+    "clear_plans", "default_planner", "external_sort", "heuristic_plan",
     "lengths_from_offsets", "load_plans", "merge", "merge_runs",
     "offsets_from_lengths", "pad_segments", "plan_key", "registry",
     "save_plans", "schedule", "segment_argsort", "segment_ids",

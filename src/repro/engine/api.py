@@ -42,10 +42,22 @@ from repro.engine.schedule import MergeSchedule, default_interpret as _interpret
 
 __all__ = [
     "sort", "argsort", "merge", "topk", "segment_sort", "segment_merge",
-    "segment_argsort", "merge_runs", "sharded_sort", "sharded_topk",
-    "autotune", "save_plans", "load_plans", "clear_plans", "Plan",
-    "MergeSchedule",
+    "segment_argsort", "merge_runs", "external_sort", "sharded_sort",
+    "sharded_topk", "autotune", "save_plans", "load_plans", "clear_plans",
+    "Plan", "MergeSchedule",
 ]
+
+#: rank/offset lanes are int32 throughout the engine (PR 6's reduce_rows
+#: overflow was this class of bug) — reject sizes the lanes cannot index.
+_LANE_LIMIT = 2 ** 31
+
+
+def _check_lane_width(n: int, op: str) -> None:
+    if n >= _LANE_LIMIT:
+        raise ValueError(
+            f"{op}: n = {n} exceeds the engine's int32 rank/offset lanes "
+            f"(max {_LANE_LIMIT - 1}); shard the input across devices "
+            "(engine.sharded_sort) instead of scaling one lane past 2**31")
 
 
 def infer_key(op: str, *args):
@@ -53,7 +65,7 @@ def infer_key(op: str, *args):
     if op == "merge":
         a, b = args[:2]
         return plan_key(op, n=a.shape[0] + b.shape[0], dtype=a.dtype)
-    if op in ("sort", "argsort", "topk"):
+    if op in ("sort", "argsort", "topk", "external_sort"):
         x = args[0]
         return plan_key(op, n=x.shape[-1], dtype=x.dtype)
     if op in ("segment_sort", "segment_argsort", "merge_runs"):
@@ -104,8 +116,11 @@ def run_op(op: str, plan: Plan, *args):
         total = (args[0].shape[0] + args[2].shape[0]
                  if op == "segment_merge" else args[0].shape[0])
         plan = plan.replace(cap=segments.static_cap(args[1], total))
+    if op == "external_sort":
+        from repro.engine.external import resolve_dofs
+        plan = resolve_dofs(plan, args[0].shape[0])
     kw = {"plan": plan, "interpret": _interpret()}
-    if op in ("argsort", "segment_argsort", "merge_runs"):
+    if op in ("argsort", "segment_argsort", "merge_runs", "external_sort"):
         kw["descending"] = True
     return registry.call(op, plan.variant, *args, **kw)
 
@@ -320,6 +335,7 @@ def merge_runs(keys, run_offsets, *, descending: bool = True, values=None,
     today and reserved for parity with the segmented ops.
     """
     del cap
+    _check_lane_width(keys.shape[0], "merge_runs")
     segments.validate_offsets(run_offsets, keys.shape[0])
     run_offsets = jnp.asarray(run_offsets, jnp.int32)
     plan = _resolve("merge_runs", plan, variant, keys, run_offsets)
@@ -336,6 +352,55 @@ def merge_runs(keys, run_offsets, *, descending: bool = True, values=None,
     ranks = jnp.arange(keys.shape[0], dtype=jnp.int32)
     mk, mr = _sched_merge_runs(keys, run_offsets, ranks=ranks, schedule=sched,
                                descending=descending, interpret=_interpret())
+    if values is None:
+        return mk
+    return mk, jax.tree.map(lambda v: v[mr], values)
+
+
+def external_sort(keys, *, descending: bool = True, values=None,
+                  stable: bool = False, tile_elems: int = 0, fan_in: int = 0,
+                  plan: Optional[Plan] = None, variant: Optional[str] = None):
+    """Sort a 1-D array larger than fast memory: the TopSort two-phase
+    out-of-core sort (DESIGN.md §8).
+
+    Phase 1 forms ``ceil(n / tile_elems)`` sorted runs by streaming
+    scratch-resident tiles through the full-width sorters; phase 2 reduces
+    them with ``ceil(log_fan_in(runs))`` streamed merge passes whose runs
+    stay HBM-resident (``stream_pallas``: the double-buffered DMA kernel in
+    ``kernels/stream_merge.py``; ``xla``: vectorised searchsorted pairwise
+    merges). Inputs no larger than one tile delegate to ``engine.sort``
+    untouched.
+
+    ``tile_elems``/``fan_in`` override the resolved plan's out-of-core
+    degrees of freedom (both clamp to powers of two; autotune sweeps them).
+    ``values=`` carries a payload pytree through the sort and returns
+    ``(sorted_keys, sorted_values)``; ``stable=True`` (or any payload)
+    orders ties by input position, bit-for-bit
+    ``jnp.argsort(stable=True)``. Sizes past the int32 lanes (``n >= 2**31``)
+    raise ``ValueError`` — shard instead (``engine.sharded_sort``).
+    """
+    if keys.ndim != 1:
+        raise ValueError("external_sort expects a 1-D key array, got shape "
+                         f"{keys.shape}")
+    n = keys.shape[0]
+    _check_lane_width(n, "external_sort")
+    from repro.engine.external import resolve_dofs
+    plan = _resolve("external_sort", plan, variant, keys)
+    plan = resolve_dofs(plan, n, tile_elems=tile_elems, fan_in=fan_in)
+    if n <= plan.tile_elems:
+        # the whole input is one scratch-resident tile: no out-of-core
+        # machinery, no copy — hand the array itself to the direct path
+        obs.event("external.delegate", n=int(n), tile=int(plan.tile_elems))
+        return sort(keys, descending=descending, values=values,
+                    stable=stable)
+    kv = values is not None or stable
+    if not kv:
+        return registry.call("external_sort", plan.variant, keys, plan=plan,
+                             descending=descending, interpret=_interpret())
+    ranks = jnp.arange(n, dtype=jnp.int32)
+    mk, mr = registry.call("external_sort", plan.variant, keys, plan=plan,
+                           descending=descending, ranks=ranks,
+                           interpret=_interpret())
     if values is None:
         return mk
     return mk, jax.tree.map(lambda v: v[mr], values)

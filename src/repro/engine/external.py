@@ -1,0 +1,179 @@
+"""``engine.external_sort`` internals: the TopSort two-phase out-of-core
+sort (arXiv:2205.07991; DESIGN.md §8).
+
+Every other engine op assumes its working set fits one ``pallas_call``'s
+scratch, which caps the sortable size at VMEM. Here only a *tile* ever has
+to be resident:
+
+- **Phase 1 — run formation.** The input is padded to ``R = ceil(n/tile)``
+  tiles of ``plan.tile_elems`` keys and every tile is sorted at full merger
+  width: on the ``stream_pallas`` variant through the existing Pallas chunk
+  kernel + fused merge-tree schedule, on ``xla`` through one row sort
+  (stable row argsort with rank lanes for KV). One read + one write of the
+  data.
+- **Phase 2 — run reduction.** The ``R`` HBM-resident runs reduce with
+  ``ceil(log_fan_in(R))`` streamed passes (``schedule.stream_pass``):
+  groups of ``plan.fan_in`` runs merge in one pass, through the
+  double-buffered DMA kernel (``kernels/stream_merge.py``) on
+  ``stream_pallas`` or vectorised searchsorted pairwise merges on ``xla``.
+  Each pass is one more read + write — the intermediate data makes exactly
+  ``ceil(log_fan_in(R))`` HBM round trips, the traffic model
+  ``launch/roofline.external_sort_bytes`` prices.
+
+Direction and stability: KV calls (rank lanes) sort in the requested
+direction natively at every stage; key-only calls reduce descending and
+reverse once at the end. Rank lanes must be non-decreasing along the input
+(the engine passes positions), so a tile's stable key argsort and the
+compound ``(key, rank)`` merges agree bit-for-bit with
+``jnp.argsort(stable=True)``.
+
+``obs`` events: ``external.run_form`` (phase 1) and one ``external.pass``
+per phase-2 pass, each carrying ``bytes_streamed`` so the flight recorder's
+HBM-traffic accounting extends out of core.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core.flims import next_pow2 as _next_pow2
+from repro.core.lanes import INVALID_RANK
+from repro.engine.schedule import MergeSchedule, reduce_rows, stream_pass
+from repro.kernels.flims_merge import bound_keys
+
+
+def resolve_dofs(plan, n: int, *, tile_elems: int = 0, fan_in: int = 0,
+                 backend=None):
+    """Fill the external-sort degrees of freedom: explicit arguments win,
+    then the plan's own fields, then backend defaults. Tiles clamp to a
+    power of two ``>= w``; fan-in to a power of two ``>= 2``."""
+    t = tile_elems or plan.tile_elems
+    if not t:
+        backend = backend or jax.default_backend()
+        t = 1 << 18 if backend == "tpu" else 1 << 20
+    t = max(_next_pow2(max(t, 2)), plan.w)
+    f = fan_in or plan.fan_in or 8
+    f = max(_next_pow2(max(f, 2)), 2)
+    return plan.replace(tile_elems=t, fan_in=f)
+
+
+def _form_runs_xla(kp, rp, R: int, T: int, descending: bool):
+    """Phase 1 on XLA: one directional row sort per tile (stable row
+    argsort carrying the rank lane for KV)."""
+    rows = kp.reshape(R, T)
+    if rp is None:
+        return jnp.sort(rows, axis=-1,
+                        descending=descending).reshape(-1), None
+    perm = jnp.argsort(rows, axis=-1, stable=True, descending=descending)
+    k2 = jnp.take_along_axis(rows, perm, axis=-1)
+    r2 = jnp.take_along_axis(rp.reshape(R, T), perm, axis=-1)
+    return k2.reshape(-1), r2.reshape(-1)
+
+
+def _form_runs_pallas(kp, rp, R: int, T: int, *, w: int, chunk: int,
+                      levels: int, block_out: int, descending: bool,
+                      interpret: bool):
+    """Phase 1 in Pallas: the two-level sorter of ``kernels/ops.py`` applied
+    per tile — bitonic chunk kernel, then fused merge-tree passes grouped
+    ``T // chunk`` runs per tile."""
+    from repro.kernels.bitonic_sort import (sort_chunks_kv_pallas,
+                                            sort_chunks_pallas)
+    c = min(_next_pow2(max(chunk, 2)), T)
+    sched = MergeSchedule("tree_pallas", levels_per_pass=max(levels, 1),
+                          w=min(w, c), block_out=max(block_out, w))
+    if rp is None:
+        rows = sort_chunks_pallas(kp.reshape(-1, c), interpret=interpret)
+        if c == T:
+            return rows.reshape(-1), None
+        return reduce_rows(rows, schedule=sched, runs_per_group=T // c,
+                           interpret=interpret), None
+    k2, r2 = sort_chunks_kv_pallas(kp.reshape(-1, c), rp.reshape(-1, c),
+                                   descending=descending,
+                                   interpret=interpret)
+    if c == T:
+        return k2.reshape(-1), r2.reshape(-1)
+    return reduce_rows(k2, ranks=r2, schedule=sched, runs_per_group=T // c,
+                       descending=descending, interpret=interpret)
+
+
+def run_external_sort(keys, *, plan, descending: bool = True, ranks=None,
+                      interpret: bool = True):
+    """The two-phase driver behind ``engine.external_sort`` (both variants).
+
+    ``plan`` must carry resolved ``tile_elems``/``fan_in`` (``resolve_dofs``).
+    Key-only: returns sorted keys. With ``ranks=`` (int32, non-decreasing —
+    the engine passes positions): returns ``(keys, ranks)`` merged under the
+    stable compound order, i.e. ``ranks`` is the stable sort permutation.
+    """
+    n = keys.shape[0]
+    kv = ranks is not None
+    T, fan = plan.tile_elems, plan.fan_in
+    w, block_out = plan.w, plan.block_out
+    executor = ("stream_pallas" if plan.variant == "stream_pallas"
+                else "stream_xla")
+    desc_i = descending if kv else True       # key-only: reverse at the end
+    R = -(-n // T)
+    n_pad = R * T
+    itemsize = keys.dtype.itemsize + (4 if kv else 0)
+    _, last_k = bound_keys(keys.dtype, desc_i)
+    kp, rp = keys, ranks
+    if n_pad > n:
+        kp = jnp.concatenate(
+            [keys, jnp.full((n_pad - n,), last_k, keys.dtype)])
+        if kv:
+            rp = jnp.concatenate(
+                [ranks, jnp.full((n_pad - n,), INVALID_RANK, jnp.int32)])
+    elif kv:
+        rp = jnp.asarray(ranks, jnp.int32)
+
+    with jax.named_scope("repro.external.run_form"):
+        if plan.variant == "stream_pallas":
+            buf, rbuf = _form_runs_pallas(
+                kp, rp, R, T, w=w, chunk=plan.chunk, levels=plan.levels,
+                block_out=block_out, descending=desc_i, interpret=interpret)
+        else:
+            buf, rbuf = _form_runs_xla(kp, rp, R, T, desc_i)
+    obs.event("external.run_form", n=int(n), runs=int(R), tile=int(T),
+              variant=plan.variant, kv=kv,
+              bytes_streamed=int(2 * n_pad * itemsize))
+
+    slack = 0
+    if executor == "stream_pallas":
+        from repro.kernels.stream_merge import stream_slack
+        slack = stream_slack(fan, w, block_out)
+        buf = jnp.concatenate([buf, jnp.full((slack,), last_k, keys.dtype)])
+        if kv:
+            rbuf = jnp.concatenate(
+                [rbuf, jnp.full((slack,), INVALID_RANK, jnp.int32)])
+
+    runs, run_len, idx = R, T, 0
+    while runs > 1:
+        f = min(fan, _next_pow2(runs))
+        runs_pad = -(-runs // f) * f
+        if runs_pad != runs:                  # complete with sentinel runs
+            fill = (runs_pad - runs) * run_len + slack
+            buf = jnp.concatenate(
+                [buf[:runs * run_len],
+                 jnp.full((fill,), last_k, keys.dtype)])
+            if kv:
+                rbuf = jnp.concatenate(
+                    [rbuf[:runs * run_len],
+                     jnp.full((fill,), INVALID_RANK, jnp.int32)])
+        with jax.named_scope(f"repro.external.pass{idx}"):
+            buf, rbuf = stream_pass(
+                buf, rbuf, runs=runs_pad, run_len=run_len, fan_in=f,
+                executor=executor, w=w, block_out=block_out,
+                descending=desc_i, interpret=interpret, out_slack=slack)
+        obs.event("external.pass", idx=idx, fan_in=int(f),
+                  runs=int(runs_pad), run_len=int(run_len),
+                  executor=executor, level_kind="hbm_run", kv=kv,
+                  bytes_streamed=int(2 * runs_pad * run_len * itemsize))
+        runs = runs_pad // f
+        run_len *= f
+        idx += 1
+
+    if kv:
+        return buf[:n], rbuf[:n]
+    out = buf[:n]
+    return out if descending else out[::-1]

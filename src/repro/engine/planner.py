@@ -41,6 +41,9 @@ class Plan:
     cap: int = 0           # per-segment capacity; 0 = derive from shape
     levels: int = 1        # tree levels fused per pass (MergeSchedule)
     tie: str = "b"         # selector tie policy: 'b' (alg.1) | 'skew' (alg.2)
+    # external (out-of-core) sort only — engine/external.py, DESIGN.md §8
+    tile_elems: int = 0    # phase-1 run length; 0 = backend default
+    fan_in: int = 0        # runs merged per phase-2 pass; 0 = default (8)
     # sharded (cross-device) ops only — engine/sharded.py, DESIGN.md §6
     cap_factor: int = 4    # base bucket cap = cap_factor * n_local / n_dev
     splitter: str = "hist"  # splitter policy: 'regular' | 'hist'
@@ -101,16 +104,18 @@ def heuristic_plan(op: str, key: Key) -> Plan:
                  "segment_sort": "pallas_two_phase",
                  "segment_argsort": "pallas_two_phase",
                  "merge_runs": "tree_pallas",
+                 "external_sort": "stream_pallas",
                  "sharded_sort": "tree_pallas", "sharded_topk": "flims"}
         # fuse two tree levels per pass by default on the real hardware
-        levels = 2 if op in ("merge_runs", "sharded_sort") else 1
+        levels = 2 if op in ("merge_runs", "sharded_sort",
+                             "external_sort") else 1
     else:
         # CPU/GPU interpret-mode kernels are for correctness, not speed:
         # serve the hot path from XLA, keep merge on the banked dataflow.
         table = {"sort": "xla", "merge": "banked", "argsort": "xla",
                  "topk": "xla", "segment_merge": "xla",
                  "segment_sort": "xla", "segment_argsort": "xla",
-                 "merge_runs": "xla",
+                 "merge_runs": "xla", "external_sort": "xla",
                  "sharded_sort": "xla", "sharded_topk": "xla"}
         levels = 1
     return Plan(variant=table[op], w=w, block_out=block_out, chunk=256,
@@ -251,6 +256,13 @@ def candidate_plans(op: str, key: Key):
                                     splitter=splitter) for lv in (1, 2))
                 else:
                     out.append(Plan(variant, w=32, splitter=splitter))
+        elif op == "external_sort":
+            # the two out-of-core dofs: phase-1 tile size x phase-2 fan-in
+            n2 = _next_pow2(max(n, 4))
+            for tile in sorted({max(1024, n2 // 16), max(1024, n2 // 4)}):
+                for fan in (4, 16):
+                    out.append(Plan(variant, w=32, tile_elems=tile,
+                                    fan_in=fan))
         elif op in ("merge", "segment_merge"):
             for w in (32, 128):
                 for block_out in (1024, 4096):

@@ -242,8 +242,28 @@ def _merge_runs_with(variant):
     return fn
 
 
-for _v in ("xla", "tree_vmapped", "tree_pallas"):
+for _v in ("xla", "tree_vmapped", "tree_pallas", "stream_pallas",
+           "stream_xla"):
     register("merge_runs", _v)(_merge_runs_with(_v))
+
+
+# --------------------------------------------------------------------------
+# external_sort: the TopSort two-phase out-of-core sort — the variant names
+# both phase-1 run formation (Pallas chunk+tree vs XLA row sort) and the
+# phase-2 streaming executor (DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+def _external_sort_with(variant):
+    def fn(keys, *, plan, descending, interpret, ranks=None):
+        from repro.engine.external import run_external_sort
+        return run_external_sort(keys, plan=plan.replace(variant=variant),
+                                 descending=descending, ranks=ranks,
+                                 interpret=interpret)
+    return fn
+
+
+for _v in ("xla", "stream_pallas"):
+    register("external_sort", _v)(_external_sort_with(_v))
 
 
 # --------------------------------------------------------------------------

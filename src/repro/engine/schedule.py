@@ -21,6 +21,15 @@ Executors (DESIGN.md §5):
                     ``levels_per_pass >= 2`` runs ``kernels/merge_tree`` —
                     multiple tree levels fused into one ``pallas_call`` with
                     the intermediate runs resident in kernel scratch.
+- ``stream_pallas`` the out-of-core level kind: runs LIVE IN HBM and each
+                    pass is one ``kernels/stream_merge`` call that merges
+                    ``fan_in = 2^levels_per_pass`` runs per group through
+                    double-buffered DMA windows — the working set never has
+                    to fit a pallas_call's scratch (DESIGN.md §8).
+- ``stream_xla``    the same HBM-resident pass structure on XLA: each pass
+                    is ``log2(fan_in)`` rounds of vectorised searchsorted
+                    pairwise merges (no per-pass re-sort) — the CPU/GPU
+                    executor of ``engine.external_sort`` phase 2.
 
 The flat calling convention is *grouped contiguous runs*: a flat buffer of
 ``R = n_groups * runs_per_group`` descending (or ascending, see below) runs
@@ -42,18 +51,23 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro import obs
 from repro.core.flims import next_pow2 as _next_pow2
 from repro.core.lanes import (INVALID_RANK, KEY, RANK, merge_lanes,
                               stable_compare)
 from repro.engine import segments
-from repro.kernels.flims_merge import bound_keys
+from repro.kernels.flims_merge import bound_keys, lane_first
 
 #: mirror pivot for the ascending rank trick (INVALID_RANK stays padding)
 _RANK_MIRROR = INVALID_RANK - 1
 
-_VARIANTS = ("xla", "tree_vmapped", "tree_pallas")
+_VARIANTS = ("xla", "tree_vmapped", "tree_pallas", "stream_pallas",
+             "stream_xla")
+
+#: executors whose per-pass inputs are HBM-resident runs, not scratch banks
+STREAM_VARIANTS = ("stream_pallas", "stream_xla")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -317,6 +331,173 @@ def _pallas_reduce(keys, offsets, ranks, m: int, sched: MergeSchedule,
     return buf if rbuf is None else (buf, rbuf)
 
 
+def _bcount(xk, xr, vk, vr, pred, length: int):
+    """Per-element monotone-prefix count: for each query ``v[i, j]`` the
+    number of elements in sorted row ``x[i]`` satisfying ``pred`` (true on
+    a prefix of the row). Vectorised binary search — no per-pass re-sort."""
+    lo = jnp.zeros(vk.shape, jnp.int32)
+    hi = jnp.full(vk.shape, length, jnp.int32)
+
+    def step(_, lh):
+        lo_, hi_ = lh
+        mid = (lo_ + hi_) // 2
+        take = lambda a: jnp.take_along_axis(
+            a, jnp.minimum(mid, length - 1), axis=-1)
+        ok = pred(take(xk), None if xr is None else take(xr), vk, vr)
+        ok = ok & (mid < hi_)
+        return jnp.where(ok, mid + 1, lo_), jnp.where(ok, hi_, mid)
+
+    return lax.fori_loop(0, max(length, 2).bit_length() + 1, step,
+                         (lo, hi))[0]
+
+
+def _pair_merge_rows(k, r, descending: bool):
+    """Merge adjacent row pairs of a ``(R, L)`` bank of sorted rows into
+    ``(R/2, 2L)`` by computing every element's merged position directly
+    (scatter by rank count). Key-only ties take the even (A) row first;
+    with ranks the compound ``(key, rank)`` order decides — equal compound
+    lanes (sentinel padding) still land A-first, keeping pads contiguous."""
+    R2, L = k.shape[0] // 2, k.shape[1]
+    a, b = k[0::2], k[1::2]
+    if r is not None:
+        ra, rb = r[0::2], r[1::2]
+        first = lane_first(descending)
+        prec = lambda xk, xr, vk, vr: first(xk, xr, vk, vr)
+        prec_or_tie = lambda xk, xr, vk, vr: ~first(vk, vr, xk, xr)
+        ca = _bcount(b, rb, a, ra, prec, L)           # b strictly before a_i
+        cb = _bcount(a, ra, b, rb, prec_or_tie, L)    # a before-or-tying b_j
+    else:
+        ra = rb = None
+        if descending:
+            prec = lambda xk, _, vk, __: xk > vk
+            prec_or_tie = lambda xk, _, vk, __: xk >= vk
+        else:
+            prec = lambda xk, _, vk, __: xk < vk
+            prec_or_tie = lambda xk, _, vk, __: xk <= vk
+        ca = _bcount(b, None, a, None, prec, L)
+        cb = _bcount(a, None, b, None, prec_or_tie, L)
+    idx = jnp.arange(L, dtype=jnp.int32)[None, :]
+    rows = jnp.arange(R2, dtype=jnp.int32)[:, None]
+    ko = jnp.zeros((R2, 2 * L), k.dtype)
+    ko = ko.at[rows, idx + ca].set(a).at[rows, idx + cb].set(b)
+    if r is None:
+        return ko, None
+    ro = jnp.zeros((R2, 2 * L), jnp.int32)
+    ro = ro.at[rows, idx + ca].set(ra).at[rows, idx + cb].set(rb)
+    return ko, ro
+
+
+def stream_pass(buf, rbuf, *, runs: int, run_len: int, fan_in: int,
+                executor: str, w: int, block_out: int, descending: bool,
+                interpret: bool, out_slack: int = 0):
+    """ONE out-of-core pass: consecutive groups of ``fan_in`` HBM-resident
+    uniform sorted runs (``runs`` total, each ``run_len`` elements, a power
+    of two ``>= w``) each merge into one run of ``fan_in * run_len``.
+
+    ``buf``/``rbuf`` are flat; with ``executor='stream_pallas'`` they may
+    carry trailing slack past ``runs * run_len`` (``stream_merge.stream_slack``)
+    and the returned buffers carry ``>= out_slack``, so a pass chain touches
+    HBM exactly once per pass. This is the primitive ``engine.external_sort``
+    phase 2 drives directly."""
+    n_val = runs * run_len
+    if executor == "stream_pallas":
+        from repro.kernels.stream_merge import (stream_merge_runs,
+                                                stream_merge_runs_kv)
+        if rbuf is None:
+            return stream_merge_runs(
+                buf, runs=runs, run_len=run_len, fan_in=fan_in, w=w,
+                block_out=block_out, out_slack=out_slack,
+                interpret=interpret), None
+        return stream_merge_runs_kv(
+            buf, rbuf, runs=runs, run_len=run_len, fan_in=fan_in, w=w,
+            block_out=block_out, out_slack=out_slack, descending=descending,
+            interpret=interpret)
+    k = buf[:n_val].reshape(runs, run_len)
+    r = None if rbuf is None else rbuf[:n_val].reshape(runs, run_len)
+    f = fan_in
+    while f > 1:
+        k, r = _pair_merge_rows(k, r, descending)
+        f >>= 1
+    return k.reshape(-1), None if r is None else r.reshape(-1)
+
+
+def _stream_reduce(keys, offsets, ranks, m: int, sched: MergeSchedule,
+                   descending: bool, interpret: bool,
+                   uniform_len: Optional[int] = None):
+    """HBM-resident level kind: uniformise the ragged runs once (a no-op
+    when rows are already uniform power-of-two), then reduce each group with
+    ``ceil(log_fan_in(m))`` streamed passes instead of ``log2(m)`` levels."""
+    from repro.kernels.segmented_merge import padded_bank, unpad_bank
+    n = keys.shape[0]
+    K = offsets.shape[0] - 1
+    n_groups = K // m
+    fan = 1 << max(sched.levels_per_pass, 1)
+    _, last_k = bound_keys(keys.dtype, descending)
+
+    ulen = uniform_len if uniform_len is not None else _uniform_len(offsets)
+    if (ulen is not None and ulen >= sched.w
+            and ulen & (ulen - 1) == 0 and ulen * K == n):
+        run_len = ulen
+        krows = keys.reshape(K, run_len)
+        rrows = None if ranks is None else ranks.reshape(K, run_len)
+    else:
+        run_len = max(_next_pow2(segments.static_cap(offsets, n)), sched.w)
+        krows = padded_bank(keys, offsets, run_len, fill=last_k)
+        rrows = (None if ranks is None else
+                 padded_bank(ranks, offsets, run_len, fill=INVALID_RANK))
+    m2 = _next_pow2(m)
+    if m2 != m:                          # sentinel runs complete each group
+        pad = jnp.full((n_groups, m2 - m, run_len), last_k, keys.dtype)
+        krows = jnp.concatenate([krows.reshape(n_groups, m, run_len), pad],
+                                axis=1).reshape(n_groups * m2, run_len)
+        if rrows is not None:
+            rpad = jnp.full((n_groups, m2 - m, run_len), INVALID_RANK,
+                            jnp.int32)
+            rrows = jnp.concatenate(
+                [rrows.reshape(n_groups, m, run_len), rpad],
+                axis=1).reshape(n_groups * m2, run_len)
+
+    levels_total = m2.bit_length() - 1
+    buf = krows.reshape(-1)
+    rbuf = None if rrows is None else rrows.reshape(-1)
+    n_runs, mleft, passes = n_groups * m2, m2, 0
+    slack = 0
+    if sched.variant == "stream_pallas":
+        from repro.kernels.stream_merge import stream_slack
+        slack = stream_slack(fan, sched.w, sched.block_out)
+    while mleft > 1:
+        f = min(fan, mleft)
+        passes += 1
+        obs.event("schedule.pass", executor=sched.variant,
+                  levels=f.bit_length() - 1, runs=int(n_runs),
+                  n=int(n_runs * run_len), kv=rbuf is not None,
+                  level_kind="hbm_run")
+        with jax.named_scope(f"repro.schedule.stream_pass_f{f}"):
+            buf, rbuf = stream_pass(
+                buf, rbuf, runs=n_runs, run_len=run_len, fan_in=f,
+                executor=sched.variant, w=sched.w,
+                block_out=sched.block_out, descending=descending,
+                interpret=interpret, out_slack=slack)
+        n_runs //= f
+        run_len *= f
+        mleft //= f
+    obs.event("schedule.reduce", executor=sched.variant, passes=passes,
+              levels_total=levels_total,
+              hbm_trips_saved=levels_total - passes, n=int(n),
+              kv=ranks is not None)
+
+    # gather each group's valid prefix back to the flat ragged layout
+    glen = jnp.diff(offsets).reshape(n_groups, m).sum(axis=1)
+    goff = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(glen)]).astype(jnp.int32)
+    kb = buf[:n_groups * run_len].reshape(n_groups, run_len)
+    if rbuf is None:
+        return unpad_bank(kb, goff, n)
+    return (unpad_bank(kb, goff, n),
+            unpad_bank(rbuf[:n_groups * run_len].reshape(n_groups, run_len),
+                       goff, n))
+
+
 # --------------------------------------------------------------------------
 # the one entry point every former tree loop compiles to
 # --------------------------------------------------------------------------
@@ -347,7 +528,8 @@ def merge_runs(keys, offsets, *, ranks=None, schedule: MergeSchedule,
     if not descending:
         if sched.variant == "xla":
             pass                              # sorts ascending natively
-        elif sched.variant == "tree_pallas" and ranks is not None:
+        elif (sched.variant in ("tree_pallas",) + STREAM_VARIANTS
+                and ranks is not None):
             pass                              # static direction flag
         else:
             keys, ranks = _mirror(keys, offsets, ranks)
@@ -372,6 +554,10 @@ def merge_runs(keys, offsets, *, ranks=None, schedule: MergeSchedule,
         with jax.named_scope("repro.schedule.vmapped_reduce"):
             return _vmapped_reduce(keys, offsets, ranks, m, sched,
                                    uniform_len=uniform_len)
+    if sched.variant in STREAM_VARIANTS:
+        with jax.named_scope("repro.schedule.stream_reduce"):
+            return _stream_reduce(keys, offsets, ranks, m, sched, descending,
+                                  interpret, uniform_len=uniform_len)
     return _pallas_reduce(keys, offsets, ranks, m, sched, descending,
                           interpret)
 

@@ -175,15 +175,28 @@ def _tree_meta_one(grp, o, buf, rbuf, starts, lens, row0, *, group: int,
 # kernel: 2^L - 1 windowed dataflows, inner nodes through scratch streams
 # --------------------------------------------------------------------------
 
-def _tree_kernel(meta_ref, *refs, w: int, L: int, C: int, Ha: int,
-                 kv: bool, descending: bool):
+def tree_dataflow(get_rot, leaf_reader, write_chunk, *, w: int, L: int,
+                  C: int, kv: bool, descending: bool, key_dtype):
+    """The in-kernel nested-dataflow tree, abstracted over storage.
+
+    ``2^L - 1`` windowed FLiMS dataflows reduce ``2^L`` leaves to one
+    ``C``-wide output block; inner nodes stream through value-space scratch
+    accumulators, so only the leaves and the root touch refs. Callers
+    supply the storage plumbing:
+
+    - ``get_rot(idx)`` → the (left, right) initial rotations of preorder
+      internal node ``idx`` (from the host nested co-rank partition);
+    - ``leaf_reader(j)`` → a ``read(r) -> lanes`` row reader for leaf ``j``
+      (``r`` is a *relative* row; the reader owns clamping/masking);
+    - ``write_chunk(t, chunk)`` stores the root's ``t``-th w-wide chunk.
+
+    Shared by the fused merge-tree kernel (leaves = BlockSpec bank windows)
+    and ``kernels/stream_merge.py`` (leaves = double-buffered DMA windows
+    over HBM-resident runs).
+    """
     group = 1 << L
-    n_in = 2 * group if kv else group
-    ins, outs = refs[:n_in], refs[n_in:]
-    g = pl.program_id(0)
-    node_idx = _node_index(group)
     iota = lax.broadcasted_iota(jnp.int32, (w,), 0)
-    key_dtype = ins[0].dtype
+    node_idx = _node_index(group)
     _, last_k = bound_keys(key_dtype, descending)
     if kv:
         first = lane_first(descending)
@@ -196,11 +209,6 @@ def _tree_kernel(meta_ref, *refs, w: int, L: int, C: int, Ha: int,
         butterfly = lambda s: (_butterfly_desc(s[0]),)
         fills = (last_k,)
         dtypes = (key_dtype,)
-
-    def leaf_reader(j):
-        lrefs = ins[2 * j:2 * j + 2] if kv else ins[j:j + 1]
-        return lambda r: tuple(ref[jnp.minimum(r, Ha - 1), :]
-                               for ref in lrefs)
 
     def acc_reader(acc, nrows):
         return lambda r: tuple(
@@ -225,8 +233,7 @@ def _tree_kernel(meta_ref, *refs, w: int, L: int, C: int, Ha: int,
             chunk = butterfly(tuple(jnp.where(take, xa, xb)
                                     for xa, xb in zip(cA, cB)))
             if to_out:
-                for ref, c in zip(outs, chunk):
-                    ref[0, pl.ds(t * w, w)] = c
+                write_chunk(t, chunk)
             else:
                 acc = tuple(lax.dynamic_update_slice(a, c, (t * w,))
                             for a, c in zip(acc, chunk))
@@ -254,9 +261,7 @@ def _tree_kernel(meta_ref, *refs, w: int, L: int, C: int, Ha: int,
         """Post-order: children first (leaf refs or scratch streams), then
         this node's dataflow. Root (depth 0) writes the out refs."""
         mid = (lo + hi) // 2
-        idx = node_idx[(lo, hi)]
-        rotL = meta_ref[group + 2 * idx, g]
-        rotR = meta_ref[group + 2 * idx + 1, g]
+        rotL, rotR = get_rot(node_idx[(lo, hi)])
         cycles = C // w + depth
 
         def child(clo, chi):
@@ -269,6 +274,29 @@ def _tree_kernel(meta_ref, *refs, w: int, L: int, C: int, Ha: int,
                             cycles, to_out=(depth == 0))
 
     produce(0, group, 0)
+
+
+def _tree_kernel(meta_ref, *refs, w: int, L: int, C: int, Ha: int,
+                 kv: bool, descending: bool):
+    group = 1 << L
+    n_in = 2 * group if kv else group
+    ins, outs = refs[:n_in], refs[n_in:]
+    g = pl.program_id(0)
+
+    def leaf_reader(j):
+        lrefs = ins[2 * j:2 * j + 2] if kv else ins[j:j + 1]
+        return lambda r: tuple(ref[jnp.minimum(r, Ha - 1), :]
+                               for ref in lrefs)
+
+    def get_rot(idx):
+        return meta_ref[group + 2 * idx, g], meta_ref[group + 2 * idx + 1, g]
+
+    def write_chunk(t, chunk):
+        for ref, c in zip(outs, chunk):
+            ref[0, pl.ds(t * w, w)] = c
+
+    tree_dataflow(get_rot, leaf_reader, write_chunk, w=w, L=L, C=C, kv=kv,
+                  descending=descending, key_dtype=ins[0].dtype)
 
 
 # --------------------------------------------------------------------------

@@ -43,7 +43,16 @@ _SHAPE_RE = re.compile(r"\b(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|"
 def mem_bw(backend: Optional[str] = None) -> float:
     """Streaming-memory bandwidth ceiling (bytes/s) for a backend (the
     current jax backend by default) — the denominator of every achieved-GB/s
-    fraction the benchmarks report."""
+    fraction the benchmarks report.
+
+    The per-backend table is a coarse class estimate; on containers that
+    don't match it, set ``REPRO_MEM_BW_GBPS`` (GB/s, decimal) to the
+    measured machine bandwidth so achieved-vs-peak fractions stay
+    meaningful."""
+    import os
+    env = os.environ.get("REPRO_MEM_BW_GBPS")
+    if env:
+        return float(env) * 1e9
     if backend is None:
         import jax
         backend = jax.default_backend()
@@ -80,6 +89,28 @@ def sort_stream_bytes(n: int, itemsize: int, chunk: int,
     runs = max(-(-n // max(chunk, 1)), 1)
     return stream_bytes(n, itemsize,
                         1 + merge_tree_passes(runs, levels_per_pass))
+
+
+def external_passes(n_runs: int, fan_in: int) -> int:
+    """Phase-2 HBM round trips of the out-of-core sort: merging ``fan_in``
+    runs per group per pass, ``n_runs`` reduce in ``ceil(log_fan_in)``
+    streamed passes (``engine.external_sort``, DESIGN.md §8)."""
+    f = max(fan_in, 2)
+    passes, r = 0, max(n_runs, 1)
+    while r > 1:                  # exact integer ceil(log_f): mirrors the
+        r = -(-r // f)            # driver's per-pass ceil(runs / fan_in)
+        passes += 1
+    return passes
+
+
+def external_sort_bytes(n: int, itemsize: int, tile: int,
+                        fan_in: int) -> int:
+    """Minimal streaming traffic of the two-phase out-of-core sort: one
+    run-formation pass over the data plus ``external_passes`` streamed
+    run-merge passes — the traffic model the external-sort benchmark rows
+    are priced against."""
+    runs = max(-(-n // max(tile, 1)), 1)
+    return stream_bytes(n, itemsize, 1 + external_passes(runs, fan_in))
 
 
 def bound_us(n_bytes: float, backend: Optional[str] = None) -> float:

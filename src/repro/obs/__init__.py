@@ -20,9 +20,17 @@ What gets recorded (the event taxonomy — DESIGN.md §7.1):
 - ``plan.resolve``        cache hit / heuristic fallback / explicit plan
 - ``autotune.candidate``  one per measured candidate, incl. infeasible ones
 - ``autotune.winner``     the installed plan and its median time
-- ``schedule.pass``       each fused merge-tree pass (executor, levels, runs)
+- ``schedule.pass``       each fused merge-tree pass (executor, levels, runs;
+  ``level_kind='hbm_run'`` on the streaming executors whose runs live in
+  HBM rather than a scratch bank)
 - ``schedule.reduce``     one per reduction: passes vs tree levels (the HBM
   round trips a fused schedule saved)
+- ``external.run_form``   out-of-core phase 1: tiles sorted into runs, with
+  the bytes streamed (DESIGN.md §8)
+- ``external.pass``       one per out-of-core phase-2 pass: fan-in, run
+  count/length, and ``bytes_streamed`` — their count is the measured
+  ``ceil(log_fan_in(runs))`` HBM round-trip claim
+- ``external.delegate``   single-tile inputs handed to ``engine.sort``
 - ``sharded.plan``        the cap ladder, splitter policy, and executor
 - ``sharded.exec``        the cap-ladder rung the ``lax.switch`` actually
   took, the pmax'd needed cap, and the overflow flag (via
