@@ -2,22 +2,27 @@
 
 Three comparisons, all engine-planned:
 1. dense masked compute vs sorted (dropless) dispatch — the FLOP saving;
-2. the dispatch argsort 'before' (seed behaviour: pure-JAX FLiMS argsort
-   pinned) vs 'after' (engine planner picks the backend's best variant) —
-   the win this PR's rewiring buys;
-3. ragged ``engine.segment_sort`` across its registered variants — the new
+2. the routing pipeline 'before' (the unfused ``moe_route`` xla variant —
+   op-for-op the seed's top-k → softmax → stable sort → rank scan) vs
+   'after' (the planner's pick, the fused megakernel on TPU) — the win the
+   routing fusion buys;
+3. ragged ``engine.segment_sort`` across its registered variants — the
    batched segmented kernel vs the padded-XLA fallback.
+
+Dispatch rows carry roofline columns (``gbps``/``roof_gbps``/``roof_frac``)
+priced by the ``moe_dispatch_bytes`` routing-traffic model.
 """
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import bw_fields, row, time_fn
 from repro import engine
 from repro.configs import get_config
-from repro.models.moe import (moe_apply_dense, moe_apply_grouped,
-                              moe_apply_sorted, moe_init)
+from repro.launch.roofline import moe_dispatch_bytes
+from repro.models.moe import (expert_capacity, moe_apply_dense,
+                              moe_apply_grouped, moe_apply_sorted, moe_init)
 
 
 def run():
@@ -27,43 +32,53 @@ def run():
                                               n_experts_active=2)
     p = moe_init(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 256, cfg.d_model))
-    B, S, k = 4, 256, cfg.n_experts_active
-    pairs = B * S * k                       # dispatch argsort problem size
+    B, S, k, E = 4, 256, cfg.n_experts_active, cfg.n_experts
+    T = B * S
+    pairs = T * k                           # dispatch routing problem size
+    cap = expert_capacity(1.25, T, k, E)
+    dbytes = lambda fused: moe_dispatch_bytes(T, E, k, cfg.d_model, cap,
+                                              itemsize=4, fused=fused)
 
     jd = jax.jit(lambda x: moe_apply_dense(p, x, cfg))
     ud = time_fn(jd, x)
     out.append(row("moe/dense_e8k2", ud, path="dense"))
 
-    # 'before': pin the dispatch argsort to the seed's pure-JAX FLiMS variant
-    akey = engine.plan_key("argsort", n=pairs, dtype=jnp.int32)
-    engine.default_planner.put(akey, engine.Plan("flims"))
+    # 'before': pin the routing op to the unfused xla pipeline (op-for-op
+    # the pre-fusion dispatch: top-k -> softmax -> stable sort -> rank scan)
+    rkey = engine.plan_key("moe_route", n=pairs, dtype=jnp.float32,
+                           segments=1)
+    engine.default_planner.put(rkey, engine.Plan("xla"))
     js_before = jax.jit(lambda x: moe_apply_sorted(p, x, cfg))
     ub = time_fn(js_before, x)
-    out.append(row("moe/sorted_e8k2_flims_argsort", ub, path="sorted",
-                   argsort="flims", vs_dense=ud / ub))
+    out.append(row("moe/sorted_e8k2_route_xla", ub, path="sorted",
+                   route="xla", vs_dense=ud / ub,
+                   **bw_fields(dbytes(False), ub)))
 
-    # 'after': let the planner choose (XLA on CPU, FLiMS/Pallas on TPU)
+    # 'after': let the planner choose (xla on CPU, the fused kernel on TPU)
     engine.default_planner.clear()
     js_after = jax.jit(lambda x: moe_apply_sorted(p, x, cfg))
     ua = time_fn(js_after, x)
-    plan = engine.default_planner.lookup(akey)
+    plan = engine.default_planner.lookup(rkey)
+    rvar = plan.variant if plan else "n/a"
     out.append(row("moe/sorted_e8k2_engine", ua, path="sorted",
-                   argsort=plan.variant if plan else "n/a",
-                   vs_dense=ud / ua, vs_before=ub / ua))
+                   route=rvar, vs_dense=ud / ua, vs_before=ub / ua,
+                   **bw_fields(dbytes(rvar == "fused"), ua)))
 
-    # PR-2 dispatch path: the grouped route orders every device group's
-    # (token, expert) pairs via one ragged engine.segment_argsort KV call
+    # grouped dispatch: one engine.moe_route call routes every device
+    # group's (token, expert) pairs — one megakernel grid step per group
     jg = jax.jit(lambda x: moe_apply_grouped(p, x, cfg))
     ug = time_fn(jg, x)
-    splan = next((engine.Plan.from_dict(pd)
+    gplan = next((engine.Plan.from_dict(pd)
                   for ks, pd in engine.default_planner.to_table().items()
-                  if ks.startswith("segment_argsort|")), None)
-    out.append(row("moe/grouped_e8k2_segment_argsort", ug, path="grouped",
-                   dispatch="segment_argsort",
-                   variant=splan.variant if splan else "n/a",
-                   vs_dense=ud / ug))
+                  if ks.startswith("moe_route|")), None)
+    gvar = gplan.variant if gplan else "n/a"
+    out.append(row("moe/grouped_e8k2_moe_route", ug, path="grouped",
+                   dispatch="moe_route", variant=gvar, vs_dense=ud / ug,
+                   **bw_fields(dbytes(gvar == "fused"), ug)))
 
-    # the dispatch sort in isolation: planner's variant swap, same key shape
+    # the dispatch-ordering sort in isolation: planner's variant swap —
+    # the engine microbench the routing op subsumed for MoE, kept as the
+    # standalone argsort comparison
     e_keys = jnp.array(np.random.default_rng(2).integers(
         0, cfg.n_experts, pairs).astype(np.int32))
     us_by_variant = {}

@@ -1,0 +1,65 @@
+"""The fused routing op in isolation: ``engine.moe_route`` variants.
+
+Two comparisons:
+1. fused megakernel vs the unfused xla pipeline at the flagship dispatch
+   chunk (1k tokens, 8 experts, top-2 — the ``moe_dispatch`` shape), rows
+   priced by the ``moe_route_bytes`` traffic model;
+2. a production-scale sweep — 2^20 tokens across 64 experts, routed in
+   8192-token chunks (one megakernel grid step per chunk) — the shape the
+   one-pallas_call-per-chunk claim is recorded at.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bw_fields, row, time_fn
+from repro import engine
+from repro.launch.roofline import moe_route_bytes
+from repro.models.moe import expert_capacity
+
+
+def run():
+    out = []
+    # flagship dispatch chunk: mixtral-shaped top-2 of 8 experts
+    T, E, k = 1024, 8, 2
+    cap = expert_capacity(1.25, T, k, E)
+    logits = jax.random.normal(jax.random.PRNGKey(0), (1, T, E), jnp.float32)
+    us_by = {}
+    for variant in engine.registry.variants("moe_route"):
+        fn = jax.jit(lambda lg, var=variant: engine.moe_route(
+            lg, k, cap, variant=var))
+        us_by[variant] = time_fn(fn, logits)
+    for variant, us in us_by.items():
+        extra = {"vs_xla": us_by["xla"] / us} if variant == "fused" else {}
+        out.append(row(f"moe_route/{variant}_t1k_e8k2", us, T=T, E=E, k=k,
+                       cap=cap, **extra,
+                       **bw_fields(moe_route_bytes(T, E, k,
+                                                   fused=(variant == "fused")),
+                                   us)))
+
+    # planner-served row at the same shape (the dispatch paths' actual cost)
+    fn = jax.jit(lambda lg: engine.moe_route(lg, k, cap))
+    us = time_fn(fn, logits)
+    rkey = engine.plan_key("moe_route", n=T * k, dtype=jnp.float32,
+                           segments=1)
+    plan = engine.default_planner.lookup(rkey)
+    out.append(row("moe_route/engine_t1k_e8k2", us,
+                   variant=plan.variant if plan else "n/a", T=T, E=E, k=k))
+
+    # production-scale sweep: 2^20 tokens, 64 experts, top-2, chunked —
+    # one grid step (one fused pallas_call body) per 8192-token chunk
+    G, Tc, E2, k2 = 128, 8192, 64, 2
+    cap2 = expert_capacity(1.25, Tc, k2, E2)
+    logits2 = jax.random.normal(jax.random.PRNGKey(1), (G, Tc, E2),
+                                jnp.float32)
+    fn2 = jax.jit(lambda lg: engine.moe_route(lg, k2, cap2))
+    us2 = time_fn(fn2, logits2, repeats=3, warmup=1)
+    rkey2 = engine.plan_key("moe_route", n=Tc * k2, dtype=jnp.float32,
+                            segments=G)
+    plan2 = engine.default_planner.lookup(rkey2)
+    out.append(row("moe_route/1m_tokens_e64k2", us2,
+                   variant=plan2.variant if plan2 else "n/a",
+                   tokens=G * Tc, chunks=G, T=Tc, E=E2, k=k2, cap=cap2,
+                   **bw_fields(G * moe_route_bytes(
+                       Tc, E2, k2,
+                       fused=bool(plan2 and plan2.variant == "fused")), us2)))
+    return out

@@ -49,8 +49,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (argsort_bench, external_sort_bench, fig14_w_sweep,
                             fig15_full_sort, kernel_merge, merge_tree_bench,
-                            moe_dispatch, sharded_sort_bench, skew_balance,
-                            table2_comparators)
+                            moe_dispatch, moe_route_bench, sharded_sort_bench,
+                            skew_balance, table2_comparators)
     sections = [(table2_comparators, "Table 2 (comparator counts)"),
                 (fig14_w_sweep, "Fig 14 (throughput vs w)"),
                 (fig15_full_sort, "Fig 15 (complete sort)"),
@@ -59,6 +59,7 @@ def main(argv=None) -> None:
                 (kernel_merge, "Pallas kernels (interpret)"),
                 (argsort_bench, "Argsort variants (payload lanes)"),
                 (moe_dispatch, "MoE dispatch via repro.engine"),
+                (moe_route_bench, "DESIGN §9 (fused MoE routing op)"),
                 (sharded_sort_bench, "S8.2 (sharded sample sort, 8 devices)"),
                 (external_sort_bench, "DESIGN §8 (out-of-core external sort)")]
     if args.only:

@@ -5,9 +5,10 @@ The single production entry point for sorting workloads (DESIGN.md §3):
 ``segment_sort`` / ``segment_merge`` over ragged batches, all planned by an
 autotunable variant/parameter cache.
 """
-from repro.engine.api import (MergeSchedule, Plan, argsort, autotune,
-                              clear_plans, external_sort, load_plans, merge,
-                              merge_runs, save_plans, segment_argsort,
+from repro.engine.api import (MergeSchedule, Plan, RouteResult, argsort,
+                              autotune, clear_plans, external_sort,
+                              load_plans, merge, merge_runs, moe_route,
+                              moe_route_ep, save_plans, segment_argsort,
                               segment_merge, segment_sort, sharded_sort,
                               sharded_topk, sort, topk)
 from repro.engine.planner import (Planner, default_planner, heuristic_plan,
@@ -19,9 +20,11 @@ from repro.engine.sharded import ShardedSort
 from repro.engine import registry, schedule, sharded
 
 __all__ = [
-    "MergeSchedule", "Plan", "Planner", "ShardedSort", "argsort", "autotune",
+    "MergeSchedule", "Plan", "Planner", "RouteResult", "ShardedSort",
+    "argsort", "autotune",
     "clear_plans", "default_planner", "external_sort", "heuristic_plan",
-    "lengths_from_offsets", "load_plans", "merge", "merge_runs",
+    "lengths_from_offsets", "load_plans", "merge", "merge_runs", "moe_route",
+    "moe_route_ep",
     "offsets_from_lengths", "pad_segments", "plan_key", "registry",
     "save_plans", "schedule", "segment_argsort", "segment_ids",
     "segment_merge", "segment_sort", "segment_sort_oracle", "sharded",

@@ -24,12 +24,15 @@ and ``argsort`` / ``segment_argsort`` return the stable permutation itself.
     m     = engine.merge_runs(keys, run_offsets)   # K sorted runs -> one
     res   = engine.sharded_sort(xs, mesh)        # mesh-sharded sample sort
     v, i  = engine.sharded_topk(xs, 16, mesh)    # global top-k on the mesh
+    r     = engine.moe_route(logits, k=2, capacity=64)  # fused MoE routing:
+    #       softmax+top-k+stable expert sort+capacity cut, one megakernel
+    rs    = engine.moe_route_ep(logits, 2, 64, mesh)    # expert-parallel
     plan  = engine.autotune("segment_sort", values, offsets)
     engine.save_plans("plans.json")
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +46,8 @@ from repro.engine.schedule import MergeSchedule, default_interpret as _interpret
 __all__ = [
     "sort", "argsort", "merge", "topk", "segment_sort", "segment_merge",
     "segment_argsort", "merge_runs", "external_sort", "sharded_sort",
-    "sharded_topk", "autotune", "save_plans", "load_plans", "clear_plans",
+    "sharded_topk", "moe_route", "moe_route_ep", "RouteResult",
+    "autotune", "save_plans", "load_plans", "clear_plans",
     "Plan", "MergeSchedule",
 ]
 
@@ -82,6 +86,15 @@ def infer_key(op: str, *args):
         mesh, axis = (args[1], args[2]) if op == "sharded_sort" \
             else (args[2], args[3])
         return plan_key(op, n=x.shape[0], dtype=x.dtype,
+                        segments=mesh.shape[axis], axis=str(axis))
+    if op == "moe_route":
+        logits, k = args[:2]
+        groups = logits.shape[0] if logits.ndim == 3 else 1
+        return plan_key(op, n=logits.shape[-2] * k, dtype=logits.dtype,
+                        segments=groups)
+    if op == "moe_route_ep":
+        logits, k, _cap, mesh, axis = args[:5]
+        return plan_key(op, n=logits.shape[-2] * k, dtype=logits.dtype,
                         segments=mesh.shape[axis], axis=str(axis))
     raise ValueError(f"unknown op {op!r}")
 
@@ -427,6 +440,109 @@ def segment_merge(a, a_offsets, b, b_offsets, *, descending: bool = True,
                     b_offsets)
     return registry.call("segment_merge", plan.variant, a, a_offsets, b,
                          b_offsets, plan=plan, interpret=_interpret())
+
+
+# --------------------------------------------------------------------------
+# moe_route: fused MoE routing — logits → permuted capacity slabs
+# (DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+class RouteResult(NamedTuple):
+    """One routed token chunk, every lane in stable sorted pair order
+    (expert ascending, then original pair position — paper algorithm 3)."""
+    experts: jax.Array   # (..., T*k) int32 expert id of each routed pair
+    tokens: jax.Array    # (..., T*k) int32 source token within the chunk
+    perm: jax.Array      # (..., T*k) int32 stable pair permutation (t*k + j)
+    weights: jax.Array   # (..., T*k) f32 combine weight (softmax over top-k)
+    slabs: jax.Array     # (..., T*k) int32 e*cap + rank, or E*cap if dropped
+    keep: jax.Array      # (..., T*k) bool — False = over capacity (dropped)
+
+
+def _route_drops_cb(dropped) -> None:
+    """Host sink for the per-call dropped-pair count (``jax.debug.callback``
+    target — the keep mask only exists on device)."""
+    obs.inc("moe.dropped_tokens", int(dropped))
+
+
+def moe_route(logits, k: int, capacity: int, *, values=None,
+              plan: Optional[Plan] = None, variant: Optional[str] = None):
+    """Route a chunk of tokens to expert capacity slabs in one planned op.
+
+    ``logits`` are (T, E) — or (G, T, E) for G independent groups — f32
+    router logits; ``k`` experts activate per token and each expert keeps
+    its first ``capacity`` assigned pairs in stable order (GShard drop
+    semantics, bit-for-bit the historical ``segment_sort``-based dispatch).
+    Returns a :class:`RouteResult` of (G, T*k) lanes in sorted pair order;
+    scattering ``x[tokens]`` to ``slabs`` builds the (E, capacity, d) expert
+    slabs directly and ``weights * keep`` are the combine coefficients.
+
+    The ``fused`` variant executes softmax, top-k, the stable expert sort
+    (riding the FLiMS merge-tree dataflow), and the capacity drop in ONE
+    ``pallas_call`` per chunk — no intermediate touches HBM; ``xla`` is the
+    unfused reference pipeline. ``values=`` (leaves shaped like one logit
+    column, i.e. (G, T)) gathers a payload by ``tokens`` and returns
+    ``(RouteResult, routed_values)``.
+    """
+    if logits.ndim == 2:
+        vv = None if values is None else jax.tree.map(
+            lambda v: v[None], values)
+        out = moe_route(logits[None], k, capacity, values=vv, plan=plan,
+                        variant=variant)
+        squeeze = lambda r: RouteResult(*(x[0] for x in r))
+        if values is None:
+            return squeeze(out)
+        return squeeze(out[0]), jax.tree.map(lambda v: v[0], out[1])
+    if logits.ndim != 3:
+        raise ValueError(f"moe_route expects (T, E) or (G, T, E) logits, "
+                         f"got shape {logits.shape}")
+    G, T, E = logits.shape
+    if not 1 <= k <= E:
+        raise ValueError(f"moe_route: k={k} outside [1, E={E}]")
+    if capacity < 1:
+        raise ValueError(f"moe_route: capacity={capacity} must be >= 1")
+    _check_lane_width(T * k, "moe_route")
+    logits = logits.astype(jnp.float32)
+    plan = _resolve("moe_route", plan, variant, logits, k, capacity)
+    plan = plan.replace(cap=int(capacity))
+    obs.event("moe.route", groups=G, tokens=T, experts=E, k=k,
+              capacity=int(capacity), n_pairs=G * T * k,
+              variant=plan.variant)
+    out = registry.call("moe_route", plan.variant, logits, k, int(capacity),
+                        plan=plan, interpret=_interpret())
+    e_s, t_s, perm, w_s, slab, keep = out
+    keep = keep.astype(bool)
+    if obs.enabled():
+        jax.debug.callback(_route_drops_cb, keep.size - jnp.sum(keep))
+    res = RouteResult(e_s, t_s, perm, w_s, slab, keep)
+    if values is None:
+        return res
+    pay = jax.tree.map(lambda v: jnp.take_along_axis(v, t_s, axis=-1),
+                       values)
+    return res, pay
+
+
+def moe_route_ep(logits, k: int, capacity: int, mesh, axis: str = "data", *,
+                 plan: Optional[Plan] = None, variant: Optional[str] = None):
+    """Expert-parallel routing across a mesh axis: tokens are sharded over
+    ``axis`` (logits (T, E) with rows split across the P devices) and the E
+    experts are owned round-robin by the same devices (E/P each).
+
+    Each shard routes its local tokens with :func:`moe_route` — the local
+    per-expert capacity cut doubling as ``sharded_topk``'s union-of-local-
+    top-k prefilter, which provably contains every globally kept pair —
+    exchanges candidates to their expert's owner with one ``all_to_all``,
+    and the owner merges the P arrived runs and re-cuts at ``capacity`` by
+    global stable rank. Returns a :class:`~repro.engine.sharded.RouteShard`
+    of per-device slab assignments (see ``run_moe_route_ep``); semantics
+    are bit-for-bit :func:`moe_route` on the gathered logits, restricted to
+    each owner's experts.
+    """
+    plan = _resolve("moe_route_ep", plan, variant, logits, k, capacity,
+                    mesh, axis)
+    plan = plan.replace(cap=int(capacity))
+    return registry.call("moe_route_ep", plan.variant, logits, k,
+                         int(capacity), mesh, axis, plan=plan,
+                         interpret=_interpret())
 
 
 # --------------------------------------------------------------------------

@@ -105,7 +105,8 @@ def heuristic_plan(op: str, key: Key) -> Plan:
                  "segment_argsort": "pallas_two_phase",
                  "merge_runs": "tree_pallas",
                  "external_sort": "stream_pallas",
-                 "sharded_sort": "tree_pallas", "sharded_topk": "flims"}
+                 "sharded_sort": "tree_pallas", "sharded_topk": "flims",
+                 "moe_route": "fused", "moe_route_ep": "fused"}
         # fuse two tree levels per pass by default on the real hardware
         levels = 2 if op in ("merge_runs", "sharded_sort",
                              "external_sort") else 1
@@ -116,7 +117,8 @@ def heuristic_plan(op: str, key: Key) -> Plan:
                  "topk": "xla", "segment_merge": "xla",
                  "segment_sort": "xla", "segment_argsort": "xla",
                  "merge_runs": "xla", "external_sort": "xla",
-                 "sharded_sort": "xla", "sharded_topk": "xla"}
+                 "sharded_sort": "xla", "sharded_topk": "xla",
+                 "moe_route": "xla", "moe_route_ep": "xla"}
         levels = 1
     return Plan(variant=table[op], w=w, block_out=block_out, chunk=256,
                 levels=levels)
@@ -274,6 +276,14 @@ def candidate_plans(op: str, key: Key):
             if variant.endswith("two_phase"):
                 # phase 2 is a MergeSchedule: also sweep the fused depth
                 out.append(Plan(variant, w=32, chunk=256, levels=2))
+        elif op in ("moe_route", "moe_route_ep"):
+            # routing dofs: the in-kernel bitonic chunk width of the fused
+            # megakernel (the xla reference has no tile parameters)
+            if variant == "fused":
+                out.extend(Plan(variant, w=32, chunk=chunk)
+                           for chunk in (256, 512))
+            else:
+                out.append(Plan(variant, w=32))
         else:
             out.append(Plan(variant))
     return out

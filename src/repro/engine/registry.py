@@ -1,7 +1,8 @@
 """Variant registry: which implementations can serve each engine op.
 
-Every op (``sort``, ``argsort``, ``merge``, ``topk``, ``segment_sort``,
-``segment_merge``, ``segment_argsort``) has a family of registered variants — the readable
+Every op (``sort``, ``argsort``, ``merge``, ``topk``, ``moe_route``,
+``segment_sort``, ``segment_merge``, ``segment_argsort``) has a family of
+registered variants — the readable
 reference formulations, the banked/windowed FLiMS dataflow, the Pallas
 kernels, and plain XLA — all behind one calling convention:
 
@@ -159,6 +160,23 @@ def _topk_xla(x, k, *, plan, interpret, values=None):
 
 
 # --------------------------------------------------------------------------
+# moe_route: fused MoE routing — logits to permuted capacity slabs
+# --------------------------------------------------------------------------
+
+@register("moe_route", "fused")
+def _moe_route_fused(logits, k, capacity, *, plan, interpret):
+    from repro.kernels.route_fuse import moe_route_pallas
+    return moe_route_pallas(logits, k, capacity, chunk=plan.chunk,
+                            w=plan.w, interpret=interpret)
+
+
+@register("moe_route", "xla")
+def _moe_route_xla(logits, k, capacity, *, plan, interpret):
+    from repro.kernels.route_fuse import moe_route_xla
+    return moe_route_xla(logits, k, capacity)
+
+
+# --------------------------------------------------------------------------
 # segment_merge: ragged batch of 2-way merges
 # --------------------------------------------------------------------------
 
@@ -295,3 +313,21 @@ def _sharded_topk_with(variant):
 
 for _v in ("flims", "xla"):
     register("sharded_topk", _v)(_sharded_topk_with(_v))
+
+
+# --------------------------------------------------------------------------
+# moe_route_ep: expert-parallel routing — the variant names the LOCAL
+# per-shard route executor (fused megakernel vs unfused XLA); the exchange
+# and owner-side merge are variant-independent (DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+def _moe_route_ep_with(local):
+    def fn(logits, k, capacity, mesh, axis, *, plan, interpret):
+        from repro.engine.sharded import run_moe_route_ep
+        return run_moe_route_ep(logits, k, capacity, mesh, axis,
+                                plan=plan.replace(variant=local))
+    return fn
+
+
+for _v in ("fused", "xla"):
+    register("moe_route_ep", _v)(_moe_route_ep_with(_v))

@@ -371,3 +371,164 @@ def run_sharded_topk(x, k: int, mesh, axis: str = "data", *, payload=None,
     ``(values, indices, payload_topk)``."""
     plan = plan or Plan("xla")
     return _topk_impl(x, payload, k, mesh, axis, plan)
+
+
+# --------------------------------------------------------------------------
+# expert-parallel MoE routing (composes the fused route with the
+# sharded-topk candidate lemma — DESIGN.md §9)
+# --------------------------------------------------------------------------
+
+class RouteShard(NamedTuple):
+    """Per-device routing result: the (token, expert) pairs that landed on
+    this device's experts, in global stable (expert, pair-rank) order —
+    lanes are (P * A,) per device (A = the static per-source candidate cap),
+    sentinel-tailed past ``count``."""
+    experts: jnp.ndarray   # global expert id, E where invalid
+    tokens: jnp.ndarray    # global source token id
+    perm: jnp.ndarray      # global stable pair position t*k + j
+    weights: jnp.ndarray   # combine weight (f32)
+    slabs: jnp.ndarray     # LOCAL slab (e - e0)*cap + pos, E_loc*cap if drop
+    keep: jnp.ndarray      # bool: survives the GLOBAL capacity cut
+    count: jnp.ndarray     # (1,) arrived candidate count on this device
+
+
+def _emit_route_ep(arrived, dropped) -> None:
+    """Host sink for the owner-side merge outcome (``jax.debug.callback``
+    target) — one event per device per execution."""
+    obs.event("moe.route_ep.exec", arrived=int(arrived), dropped=int(dropped))
+    obs.inc("moe.dropped_tokens", int(dropped))
+
+
+def _route_ep_pass(lg, *, axis_name: str, n_dev: int, k: int, cap: int,
+                   local_variant: str, chunk: int, w: int, interpret: bool,
+                   record: bool):
+    """Per-device EP pipeline: fused-route the local token rows (the local
+    capacity cut doubling as the sharded-topk union-of-local-top-k
+    prefilter), exchange candidates to each expert's owner with one
+    all_to_all, and re-rank at the owner by global stable pair position.
+
+    Why the prefilter is lossless: a pair's owner-side rank within its
+    expert counts only *arrived* earlier pairs, so it can undercount the
+    global rank — but any missing earlier pair was locally dropped (local
+    rank >= cap), and the cap locally-kept pairs preceding *it* all arrive,
+    so an undercounted pair already has >= cap arrivals ahead of it. Hence
+    owner rank < cap iff global rank < cap, and they are equal on every
+    kept pair — the global GShard cut, computed from P local cuts.
+    """
+    from repro.engine import api
+    from repro.kernels.route_fuse import moe_route_pallas, moe_route_xla
+    T_loc, E = lg.shape
+    d = lax.axis_index(axis_name).astype(jnp.int32)
+    Npl = T_loc * k
+    E_loc = E // n_dev
+    A = min(Npl, E_loc * cap)      # kept-per-owner bound: both are hard caps
+    span = n_dev * Npl             # one expert's band of global pair ranks
+    if local_variant == "fused":
+        route = moe_route_pallas(lg[None], k, cap, chunk=chunk, w=w,
+                                 interpret=interpret)
+    else:
+        route = moe_route_xla(lg[None], k, cap)
+    e_s, _t_s, perm, w_s, _slab, keep = (x[0] for x in route)
+    keep = keep.astype(bool)
+
+    # ---- pack the locally-kept candidates into (n_dev, A) owner rows -----
+    grank = d * Npl + perm                     # global stable pair position
+    ckey = e_s * span + grank                  # global compound sort key
+    owner = jnp.clip(e_s // E_loc, 0, n_dev - 1)
+    onehot_o = owner[:, None] == lax.broadcasted_iota(jnp.int32,
+                                                      (Npl, n_dev), 1)
+    sel = onehot_o & keep[:, None]
+    col = jnp.sum(jnp.where(sel, jnp.cumsum(
+        sel.astype(jnp.int32), axis=0) - 1, 0), axis=1)
+    row = jnp.where(keep, owner, n_dev)        # dropped lanes -> dump row
+    send_k = jnp.full((n_dev + 1, A), _NEG_PAD, jnp.int32)
+    send_w = jnp.zeros((n_dev + 1, A), jnp.int32)
+    wbits = lax.bitcast_convert_type(w_s, jnp.int32)
+    # negate so the engine's DESCENDING sort yields ascending compound order
+    send_k = send_k.at[row, col].set(jnp.where(keep, -ckey, _NEG_PAD))
+    send_w = send_w.at[row, col].set(wbits)
+    cnt_send = jnp.sum(sel.astype(jnp.int32), axis=0)             # (n_dev,)
+
+    # ---- one all_to_all: candidates travel to their expert's owner -------
+    recv_k = lax.all_to_all(send_k[:n_dev], axis_name, split_axis=0,
+                            concat_axis=0, tiled=True)            # (P, A)
+    recv_w = lax.all_to_all(send_w[:n_dev], axis_name, split_axis=0,
+                            concat_axis=0, tiled=True)
+    cnt = lax.all_to_all(cnt_send, axis_name, split_axis=0,
+                         concat_axis=0, tiled=True)
+    total = jnp.sum(cnt)
+
+    # ---- owner merge: P sorted runs -> global stable order, re-cut -------
+    keys, pay = api.sort(recv_k.reshape(-1), values={"w": recv_w.reshape(-1)},
+                         stable=True, plan=Plan("flims", w=w, chunk=512))
+    M = n_dev * A
+    iota_m = lax.broadcasted_iota(jnp.int32, (M,), 0)
+    valid = iota_m < total                     # pads sort to the tail
+    ckey2 = -keys
+    e_g = jnp.where(valid, ckey2 // span, E)
+    gr = jnp.where(valid, ckey2 % span, 0)
+    el = jnp.where(valid, e_g - (d * E_loc), E_loc)
+    onehot_e = el[:, None] == lax.broadcasted_iota(jnp.int32, (M, E_loc), 1)
+    counts = jnp.sum(onehot_e.astype(jnp.int32), axis=0)
+    first = jnp.cumsum(counts) - counts
+    pos = iota_m - jnp.sum(jnp.where(onehot_e, first[None, :], 0), axis=1)
+    keep2 = valid & (pos < cap)
+    if record:
+        jax.debug.callback(_emit_route_ep, total,
+                           total - jnp.sum(keep2.astype(jnp.int32)))
+    return RouteShard(
+        experts=e_g,
+        tokens=jnp.where(valid, gr // k, 0),
+        perm=gr,
+        weights=jnp.where(valid, lax.bitcast_convert_type(pay["w"],
+                                                          jnp.float32), 0.0),
+        slabs=jnp.where(keep2, el * cap + pos, E_loc * cap),
+        keep=keep2,
+        count=total.reshape(1),
+    )
+
+
+_NEG_PAD = jnp.iinfo(jnp.int32).min + 1   # -ckey of any real pair is larger
+
+
+@partial(jax.jit, static_argnames=("k", "capacity", "mesh", "axis", "plan",
+                                   "record"))
+def _route_ep_impl(logits, k, capacity, mesh, axis, plan, record):
+    n_dev = mesh.shape[axis]
+    T, E = logits.shape
+    assert T % n_dev == 0, f"moe_route_ep: T={T} not divisible by P={n_dev}"
+    assert E % n_dev == 0, f"moe_route_ep: E={E} not divisible by P={n_dev}"
+    T_loc = T // n_dev
+    span = n_dev * T_loc * k
+    assert E * span < 2 ** 31, (
+        f"moe_route_ep: compound key e*{span}+grank overflows int32 at "
+        f"E={E}; shrink the token chunk")
+    local_variant = plan.variant if plan.variant in ("fused", "xla") \
+        else "xla"
+    from repro.engine.schedule import default_interpret
+    obs.event("moe.route_ep.plan", n_dev=n_dev, axis=axis, t_local=T_loc,
+              experts=E, k=k, capacity=int(capacity),
+              cand_cap=min(T_loc * k, (E // n_dev) * int(capacity)),
+              local_variant=local_variant)
+    fn = partial(_route_ep_pass, axis_name=axis, n_dev=n_dev, k=k,
+                 cap=int(capacity), local_variant=local_variant,
+                 chunk=plan.chunk, w=plan.w, interpret=default_interpret(),
+                 record=record)
+    spec = RouteShard(*([P(axis)] * 7))
+    return jax.shard_map(fn, mesh=mesh, in_specs=P(axis), out_specs=spec,
+                         check_vma=False)(logits)
+
+
+def run_moe_route_ep(logits, k: int, capacity: int, mesh, axis: str = "data",
+                     *, plan: Optional[Plan] = None):
+    """Expert-parallel MoE routing: (T, E) logits token-sharded over ``axis``
+    (P devices), experts owned contiguously (device d owns
+    ``[d*E/P, (d+1)*E/P)``). Returns a :class:`RouteShard` whose lanes have
+    spec P(axis): each device's slice holds the pairs routed to ITS experts
+    in global stable order, with local slab indices ready to scatter into a
+    per-device (E/P * cap + 1, d) slab buffer. The keep mask equals the
+    unsharded :func:`~repro.engine.api.moe_route` capacity cut on the
+    gathered logits, pair for pair."""
+    plan = plan or Plan("xla")
+    return _route_ep_impl(logits, k, int(capacity), mesh, axis, plan,
+                          obs.enabled())

@@ -176,7 +176,8 @@ def _tree_meta_one(grp, o, buf, rbuf, starts, lens, row0, *, group: int,
 # --------------------------------------------------------------------------
 
 def tree_dataflow(get_rot, leaf_reader, write_chunk, *, w: int, L: int,
-                  C: int, kv: bool, descending: bool, key_dtype):
+                  C: int, kv: bool, descending: bool, key_dtype,
+                  leaf_rows: int = 0):
     """The in-kernel nested-dataflow tree, abstracted over storage.
 
     ``2^L - 1`` windowed FLiMS dataflows reduce ``2^L`` leaves to one
@@ -190,9 +191,19 @@ def tree_dataflow(get_rot, leaf_reader, write_chunk, *, w: int, L: int,
       (``r`` is a *relative* row; the reader owns clamping/masking);
     - ``write_chunk(t, chunk)`` stores the root's ``t``-th w-wide chunk.
 
-    Shared by the fused merge-tree kernel (leaves = BlockSpec bank windows)
-    and ``kernels/stream_merge.py`` (leaves = double-buffered DMA windows
-    over HBM-resident runs).
+    ``leaf_rows`` (optional) declares every leaf to hold exactly that many
+    real rows, which lets inner nodes trim their production to the subtree's
+    actual length + one fill chunk instead of the generic ``C/w + depth``
+    cycles. That matters when ``C`` covers the WHOLE group (the fused
+    routing kernel sorts an entire token chunk as one block): without the
+    trim every inner node would stream full-``C`` fills. Reading past a
+    trimmed accumulator clamps to its last (fill) row, which merges
+    identically to explicit fill production.
+
+    Shared by the fused merge-tree kernel (leaves = BlockSpec bank windows),
+    ``kernels/stream_merge.py`` (leaves = double-buffered DMA windows over
+    HBM-resident runs), and ``kernels/route_fuse.py`` (leaves = register-
+    resident bitonic-sorted chunks of one token group).
     """
     group = 1 << L
     iota = lax.broadcasted_iota(jnp.int32, (w,), 0)
@@ -263,15 +274,17 @@ def tree_dataflow(get_rot, leaf_reader, write_chunk, *, w: int, L: int,
         mid = (lo + hi) // 2
         rotL, rotR = get_rot(node_idx[(lo, hi)])
         cycles = C // w + depth
+        if leaf_rows and depth > 0:
+            cycles = min(cycles, (hi - lo) * leaf_rows + 1)
 
         def child(clo, chi):
             if chi - clo == 1:
                 return leaf_reader(clo)
-            acc = produce(clo, chi, depth + 1)
-            return acc_reader(acc, C // w + depth + 3)
+            acc, ccycles = produce(clo, chi, depth + 1)
+            return acc_reader(acc, ccycles + 2)
 
-        return merge_stream(child(lo, mid), child(mid, hi), rotL, rotR,
-                            cycles, to_out=(depth == 0))
+        return (merge_stream(child(lo, mid), child(mid, hi), rotL, rotR,
+                             cycles, to_out=(depth == 0)), cycles)
 
     produce(0, group, 0)
 

@@ -1,0 +1,221 @@
+"""Pallas TPU megakernel: fused MoE routing — logits → capacity slabs.
+
+The engine's flagship consumer (MoE dispatch) used to bracket ONE
+``engine.segment_sort`` with ~5 separate XLA ops: router softmax, top-k,
+pair flattening, the capacity rank scan, and the slab-index select — every
+intermediate (logits, weights, ranks, slab indices) round-tripping HBM
+between ops. This kernel executes the whole routing pipeline per token
+chunk inside ONE ``pallas_call``:
+
+1. **top-k in registers** — ``k`` iterative arg-max sweeps over the (T, E)
+   logits block, ties to the lower expert index (bit-for-bit
+   ``lax.top_k``);
+2. **softmax in registers** over the k selected logits (``jax.nn.softmax``
+   op-for-op, so combine weights match the unfused path exactly);
+3. **stable expert sort riding the FLiMS merge tree** — each (token,
+   expert) pair is encoded as the compound key ``e * Np + p`` (``p`` the
+   pair's input position), so a plain ascending sort IS the stable-by-
+   expert order of the dispatch contract. Keys are distinct, which frees
+   the KV machinery's int32 rank lane to carry the combine weight's bits
+   (``bitcast``) as an inert payload: chunk-local bitonic networks
+   (``_bitonic_rows_kv``) feed ``tree_dataflow`` — the same 2^L−1
+   windowed-dataflow tree the fused merge-tree kernel runs — with every
+   rotation zero because each grid step owns its whole group, and the
+   intermediate runs never leave the kernel;
+4. **capacity-drop by stable rank in-kernel** — a one-hot histogram over
+   the sorted expert lane gives each expert's first-occurrence offset, so
+   ``pos_in_e = i - first[e]`` reproduces the unfused path's searchsorted
+   rank, and GShard drop semantics (``pos_in_e < cap``) are bit-for-bit
+   identical to ``moe_apply_grouped``.
+
+Outputs per group, all in sorted pair order: expert ids, source token ids,
+the stable pair permutation, combine weights, slab indices
+(``e*cap + pos`` or the ``E*cap`` overflow slot), and the keep mask.
+
+The ``xla`` reference variant below is the unfused pipeline verbatim
+(``lax.top_k`` → ``jax.nn.softmax`` → stable argsort → searchsorted) — the
+oracle the fused kernel is tested bit-for-bit against, and the planner's
+CPU/GPU serving path where interpret-mode Pallas is correctness-only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import obs
+from repro.core.flims import next_pow2 as _next_pow2
+from repro.core.lanes import INVALID_RANK
+from repro.kernels.bitonic_sort import _bitonic_rows_kv
+from repro.kernels.merge_tree import tree_dataflow
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _topk_softmax(logits, k: int, E: int):
+    """In-register top-k + softmax over a (T, E) logits block.
+
+    ``k`` arg-max sweeps, ties to the lower expert index — value-and-index
+    identical to ``lax.top_k`` (which Mosaic cannot lower) — then the
+    ``jax.nn.softmax`` combine weights over the selected logits. The sweeps
+    compare the monotone int32 bit transform of the floats, not the floats:
+    ``top_k`` orders by IEEE *total order* (``-0.0 < +0.0``), which float
+    ``==``/``max`` cannot see.
+    """
+    T = logits.shape[0]
+    iota_e = lax.broadcasted_iota(jnp.int32, (T, E), 1)
+    untwist = lambda b: b ^ ((b >> 31) & jnp.int32(0x7FFFFFFF))
+    okey = untwist(lax.bitcast_convert_type(logits, jnp.int32))
+    neg = jnp.iinfo(jnp.int32).min
+    l, vals, idxs = okey, [], []
+    for _ in range(k):
+        m = jnp.max(l, axis=1, keepdims=True)
+        ij = jnp.min(jnp.where(l == m, iota_e, E), axis=1)
+        vals.append(lax.bitcast_convert_type(untwist(m[:, 0]), jnp.float32))
+        idxs.append(ij)
+        l = jnp.where(iota_e == ij[:, None], neg, l)
+    v = jnp.stack(vals, axis=1)                       # (T, k) descending
+    e = jnp.stack(idxs, axis=1).astype(jnp.int32)     # (T, k)
+    return jax.nn.softmax(v, axis=-1), e
+
+
+def _route_kernel(l_ref, e_ref, t_ref, p_ref, w_ref, s_ref, m_ref,
+                  ks_ref, rs_ref, *, k: int, E: int, cap: int, T: int,
+                  Np: int, chunk: int, w: int):
+    logits = l_ref[0]                                  # (T, E) f32
+    wgt, eix = _topk_softmax(logits, k, E)
+    N = T * k
+
+    # ---- compound sort key: e * Np + pair-position (distinct, ascending
+    # order == stable-by-expert), weight bits riding the inert rank lane ---
+    pair = (lax.broadcasted_iota(jnp.int32, (T, k), 0) * k
+            + lax.broadcasted_iota(jnp.int32, (T, k), 1))
+    key = eix * Np + pair
+    wbits = lax.bitcast_convert_type(wgt, jnp.int32)
+    kf, rf = key.reshape(N), wbits.reshape(N)
+    if Np > N:                   # pads == the tree's fill: sort to the tail
+        kf = jnp.concatenate([kf, jnp.full((Np - N,), _I32_MAX, jnp.int32)])
+        rf = jnp.concatenate(
+            [rf, jnp.full((Np - N,), INVALID_RANK, jnp.int32)])
+
+    # ---- chunk-local stable bitonic, then the in-kernel FLiMS tree -------
+    ks2, rs2 = _bitonic_rows_kv(kf.reshape(Np // chunk, chunk),
+                                rf.reshape(Np // chunk, chunk),
+                                descending=False)
+    L = (Np // chunk).bit_length() - 1
+    if L == 0:
+        ks, rs = ks2.reshape(Np), rs2.reshape(Np)
+    else:
+        kflat, rflat = ks2.reshape(Np), rs2.reshape(Np)
+        rows_leaf = chunk // w
+
+        def leaf_reader(j):
+            base = j * rows_leaf
+
+            def read(r):
+                rr = jnp.minimum(r, rows_leaf - 1)
+                kr = lax.dynamic_slice(kflat, ((base + rr) * w,), (w,))
+                vr = lax.dynamic_slice(rflat, ((base + rr) * w,), (w,))
+                over = r >= rows_leaf
+                return (jnp.where(over, _I32_MAX, kr),
+                        jnp.where(over, INVALID_RANK, vr))
+            return read
+
+        def write_chunk(t, chunkv):
+            ks_ref[0, pl.ds(t * w, w)] = chunkv[0]
+            rs_ref[0, pl.ds(t * w, w)] = chunkv[1]
+
+        # whole group in one output block ⇒ every production start is 0 and
+        # every node rotation is 0 (the nested co-rank of offset 0)
+        tree_dataflow(lambda idx: (jnp.int32(0), jnp.int32(0)), leaf_reader,
+                      write_chunk, w=w, L=L, C=Np, kv=True, descending=False,
+                      key_dtype=jnp.int32, leaf_rows=rows_leaf)
+        ks, rs = ks_ref[0, :], rs_ref[0, :]
+
+    # ---- decode + capacity drop by stable rank ---------------------------
+    iota_n = lax.broadcasted_iota(jnp.int32, (Np,), 0)
+    valid = iota_n < N            # real pairs sort before the pad/fill tail
+    e_s = jnp.where(valid, ks // Np, E)
+    p_s = jnp.where(valid, ks % Np, 0)
+    w_s = jnp.where(valid, lax.bitcast_convert_type(rs, jnp.float32), 0.0)
+    onehot = e_s[:, None] == lax.broadcasted_iota(jnp.int32, (Np, E), 1)
+    counts = jnp.sum(onehot.astype(jnp.int32), axis=0)          # (E,)
+    first = jnp.cumsum(counts) - counts     # first-occurrence offset per e
+    pos = iota_n - jnp.sum(jnp.where(onehot, first[None, :], 0), axis=1)
+    keep = valid & (pos < cap)
+    e_ref[0, :] = e_s
+    t_ref[0, :] = p_s // k
+    p_ref[0, :] = p_s
+    w_ref[0, :] = w_s
+    s_ref[0, :] = jnp.where(keep, e_s * cap + pos, E * cap)
+    m_ref[0, :] = keep.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "capacity", "chunk", "w",
+                                             "interpret"))
+@obs.scoped("kernels.route_fuse")
+def moe_route_pallas(logits, k: int, capacity: int, *, chunk: int = 256,
+                     w: int = 32, interpret: bool = True):
+    """Fused routing of (G, T, E) f32 router logits: one ``pallas_call``,
+    one grid step per token group. Returns, each (G, T*k) in stable sorted
+    pair order: ``(experts, tokens, perm, weights, slabs, keep_i32)``.
+    """
+    G, T, E = logits.shape
+    N = T * k
+    Np = _next_pow2(max(N, 8))
+    w_eff = min(w, Np)
+    chunk_eff = max(w_eff, min(_next_pow2(max(chunk, 1)), Np))
+    assert E * Np < 2 ** 31, (
+        f"moe_route: compound key e*{Np}+p overflows int32 at E={E}; "
+        "shrink the token chunk")
+    cap = int(capacity)
+
+    kern = functools.partial(_route_kernel, k=k, E=E, cap=cap, T=T, Np=Np,
+                             chunk=chunk_eff, w=w_eff)
+    out_spec = pl.BlockSpec((1, Np), lambda g: (g, 0))
+    shape = lambda dt: jax.ShapeDtypeStruct((G, Np), dt)
+    outs = pl.pallas_call(
+        kern,
+        grid=(G,),
+        in_specs=[pl.BlockSpec((1, T, E), lambda g: (g, 0, 0))],
+        out_specs=[out_spec] * 6,
+        out_shape=[shape(jnp.int32), shape(jnp.int32), shape(jnp.int32),
+                   shape(jnp.float32), shape(jnp.int32), shape(jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((1, Np), jnp.int32),
+                        pltpu.VMEM((1, Np), jnp.int32)],
+        interpret=interpret,
+        name="flims_route_fuse",
+    )(logits)
+    return tuple(o[:, :N] for o in outs)
+
+
+@obs.scoped("kernels.route_xla")
+def moe_route_xla(logits, k: int, capacity: int):
+    """The unfused reference pipeline — the exact op sequence
+    ``moe_apply_grouped`` ran before fusion (``lax.top_k`` →
+    ``jax.nn.softmax`` → stable ascending argsort of expert ids →
+    searchsorted capacity ranks). Oracle for the fused kernel and the
+    serving path on backends where interpret-mode Pallas is not a win.
+    """
+    G, T, E = logits.shape
+    N = T * k
+    cap = int(capacity)
+    vals, idx = lax.top_k(logits, k)
+    wgt = jax.nn.softmax(vals, axis=-1)
+    e = idx.reshape(G, N).astype(jnp.int32)
+    wf = wgt.reshape(G, N)
+    perm = jnp.argsort(e, axis=-1, stable=True).astype(jnp.int32)
+    e_s = jnp.take_along_axis(e, perm, axis=-1)
+    w_s = jnp.take_along_axis(wf, perm, axis=-1)
+    iota = jnp.arange(N, dtype=jnp.int32)[None, :]
+    first = jax.vmap(
+        lambda es: jnp.searchsorted(es, es, side="left"))(e_s).astype(
+            jnp.int32)
+    pos = iota - first
+    keep = pos < cap
+    slab = jnp.where(keep, e_s * cap + pos, E * cap)
+    return e_s, perm // k, perm, w_s, slab, keep.astype(jnp.int32)

@@ -113,6 +113,40 @@ def external_sort_bytes(n: int, itemsize: int, tile: int,
     return stream_bytes(n, itemsize, 1 + external_passes(runs, fan_in))
 
 
+def moe_route_bytes(T: int, E: int, k: int, fused: bool = True) -> int:
+    """Minimal streaming traffic of MoE routing for a chunk of ``T`` tokens,
+    ``k`` active of ``E`` experts (all lanes f32/int32 = 4 bytes).
+
+    ``fused`` (``engine.moe_route`` megakernel, DESIGN.md §9): the logits are
+    read once and only the six routed lanes (experts, tokens, perm, weights,
+    slabs, keep) are written — nothing between softmax and the capacity cut
+    touches HBM. Unfused: every stage round-trips its intermediates — top-k
+    values+indices, the softmax'd weights, the three sorted lanes, and the
+    rank/keep/slab scan each cost a read+write — the traffic the fusion
+    deletes, and the denominator of its roofline speedup claim."""
+    lane = T * k * 4
+    logits = T * E * 4
+    out_lanes = 6 * lane
+    if fused:
+        return logits + out_lanes
+    return (logits + 2 * lane          # top-k: read logits, write vals+idx
+            + 2 * lane                 # softmax over the top-k values
+            + 2 * 3 * lane             # stable KV sort: 3 lanes in + out
+            + 2 * 3 * lane             # rank scan + keep + slab select
+            + out_lanes)
+
+
+def moe_dispatch_bytes(T: int, E: int, k: int, d: int, cap: int,
+                       itemsize: int = 4, fused: bool = True) -> int:
+    """Streaming-traffic model of one full dispatch: route, scatter tokens
+    into the (E, cap, d) slabs, stream the slabs through the experts once
+    (read in, write out), and combine back to (T, d) — the price a measured
+    ``moe_apply_*`` row is compared against."""
+    io = 2 * T * d * itemsize          # read x, write y
+    slab = E * cap * d * itemsize
+    return io + 4 * slab + moe_route_bytes(T, E, k, fused)
+
+
 def bound_us(n_bytes: float, backend: Optional[str] = None) -> float:
     """Roofline lower bound (µs) for moving ``n_bytes`` at the backend's
     streaming bandwidth."""

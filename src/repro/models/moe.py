@@ -4,13 +4,14 @@ Two dispatch paths:
 - ``dense``: one-hot combine einsum over the expert axis — fully static,
   GSPMD-friendly; experts shard over the model axis (EP) or their hidden dim
   shards (TP) per ShardingConfig. This is the path the 512-chip dry-run uses.
-- ``sorted``: dropless dispatch that orders tokens by expert with a stable
-  KV sort served by ``repro.engine`` (planner-selected variant: FLiMS/Pallas
-  on TPU, XLA on CPU) — the paper's sorter as a first-class framework
-  feature. The dispatch permutation comes from ``engine.segment_argsort``'s
-  rank lanes and the (token, weight) payload rides with the keys, so the
-  grouped path orders all device groups in ONE ragged engine call with no
-  external argsort→gather round trip.
+- ``sorted``: dropless dispatch that orders tokens by expert with the fused
+  routing engine op: ``engine.moe_route`` takes the raw router logits and
+  returns the permuted lanes, combine weights, slab indices, and keep mask
+  of the GShard capacity contract in ONE planned call (a single Pallas
+  megakernel per token chunk on TPU — softmax, top-k, the stable FLiMS
+  expert sort, and the capacity drop never round-trip HBM; the unfused XLA
+  pipeline elsewhere, bit-for-bit identical). Only the scatter into
+  capacity slabs and the expert einsums remain outside the op.
 """
 from __future__ import annotations
 
@@ -37,6 +38,14 @@ def moe_init(key, cfg):
             "wi": stack(ks[1], d, f),
             "wg": stack(ks[2], d, f),
             "wo": stack(ks[3], f, d)}
+
+
+def expert_capacity(capacity_factor: float, T: int, k: int, E: int) -> int:
+    """GShard per-expert slab capacity for T tokens, k active of E experts.
+
+    The single definition of the dispatch paths' capacity contract — the
+    ``+ 1`` keeps tiny chunks from rounding to an empty slab."""
+    return int(capacity_factor * T * k / E) + 1
 
 
 def router_probs(p, x, cfg):
@@ -88,32 +97,22 @@ def moe_apply_dense(p, x, cfg):
 
 
 def moe_apply_sorted(p, x, cfg, capacity_factor: float = 1.25):
-    """Dropless-ish dispatch: FLiMS-sort token-expert pairs, bucket, compute.
+    """Dropless-ish dispatch: fused-route token-expert pairs, bucket, compute.
 
-    Tokens are ordered by (expert, position) with the stable FLiMS argsort,
-    then each expert processes a contiguous capacity-padded slab.
+    The whole routing pipeline — softmax, top-k, the stable FLiMS expert
+    sort, the capacity cut — is ONE ``engine.moe_route`` call on the raw
+    logits; each expert then processes a contiguous capacity-padded slab.
     """
     B, S, d = x.shape
     T = B * S
     k = cfg.n_experts_active
     E = cfg.n_experts
-    w, idx = router_probs(p, x, cfg)
     xf = x.reshape(T, d)
-    flat_e = idx.reshape(T * k).astype(jnp.int32)      # expert of each pair
-    flat_w = w.reshape(T * k)
-    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
-    # one KV engine call: stable sort by expert id (ascending) with the
-    # (token, weight) payload riding the lanes. Stability (paper alg. 3)
-    # keeps original order inside each expert group; the permutation is
-    # applied inside the engine, so no external argsort→gather round trip.
-    e_sorted, (t_sorted, w_sorted) = engine.sort(
-        flat_e, values=(tok, flat_w), stable=True, descending=False)
-    cap = int(capacity_factor * T * k / E) + 1
-    # rank of each pair within its expert group
-    pos_in_e = jnp.arange(T * k) - jnp.searchsorted(e_sorted, e_sorted,
-                                                    side="left")
-    keep = pos_in_e < cap
-    slab_idx = jnp.where(keep, e_sorted * cap + pos_in_e, E * cap)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    cap = expert_capacity(capacity_factor, T, k, E)
+    route = engine.moe_route(logits, k, cap)
+    t_sorted, keep, slab_idx = route.tokens, route.keep, route.slabs
+    w_sorted = route.weights.astype(x.dtype)
     xin = jnp.zeros((E * cap + 1, d), x.dtype).at[slab_idx].set(xf[t_sorted])
     xin = xin[:-1].reshape(E, cap, d)
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["wg"]))
@@ -127,38 +126,25 @@ def moe_apply_sorted(p, x, cfg, capacity_factor: float = 1.25):
 def _group_dispatch_batched(p, xg, cfg, cap):
     """Sorted dispatch for all G device groups at once. xg: (G, T, d).
 
-    The (token, expert) pairs of every group are one ragged batch — G
-    uniform segments of T·k pairs — so the whole dispatch ordering is ONE
-    ``engine.segment_sort`` call: the permutation comes from
-    ``engine.segment_argsort``'s rank lanes (stability keeps token order
-    inside each expert slab, paper alg. 3) and the (token, weight) payload
-    is applied inside the engine — no flatten→argsort→gather round trip.
-    Only the scatter into capacity slabs stays vmapped.
+    The entire routing pipeline for every group — softmax, top-k, the stable
+    FLiMS expert sort (paper alg. 3), the capacity-rank cut — is ONE
+    ``engine.moe_route`` call on the (G, T, E) logits: one Pallas megakernel
+    grid step per group on TPU, no intermediate ever re-touching HBM. Only
+    the scatter into capacity slabs stays vmapped.
     """
     G, T, d = xg.shape
     k, E = cfg.n_experts_active, cfg.n_experts
-    w, idx = router_probs(p, xg, cfg)                  # (G, T, k)
-    flat_e = idx.reshape(G * T * k).astype(jnp.int32)
-    flat_w = w.reshape(G * T * k)
-    tok = jnp.tile(jnp.repeat(jnp.arange(T, dtype=jnp.int32), k), G)
-    offs = jnp.arange(G + 1, dtype=jnp.int32) * (T * k)
-    e_sorted, (t_sorted, w_sorted) = engine.segment_sort(
-        flat_e, offs, values=(tok, flat_w), stable=True, descending=False,
-        cap=T * k)
-    e_sorted = e_sorted.reshape(G, T * k)
-    t_sorted = t_sorted.reshape(G, T * k)
-    w_sorted = w_sorted.reshape(G, T * k)              # (G, T*k)
+    logits = xg.astype(jnp.float32) @ p["router"]      # (G, T, E)
+    route = engine.moe_route(logits, k, cap)           # lanes (G, T*k)
+    t_sorted, keep, slab_idx = route.tokens, route.keep, route.slabs
+    w_sorted = route.weights.astype(xg.dtype)
 
-    def pack(e_sorted, t_sorted, xf):
-        pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - jnp.searchsorted(
-            e_sorted, e_sorted, side="left").astype(jnp.int32)
-        keep = pos_in_e < cap
-        slab_idx = jnp.where(keep, e_sorted * cap + pos_in_e, E * cap)
+    def pack(slab_idx, t_sorted, xf):
         xin = jnp.zeros((E * cap + 1, d), xf.dtype).at[slab_idx].set(
             xf[t_sorted])
-        return xin[:-1].reshape(E, cap, d), slab_idx, keep
+        return xin[:-1].reshape(E, cap, d)
 
-    xin, slab_idx, keep = jax.vmap(pack)(e_sorted, t_sorted, xg)
+    xin = jax.vmap(pack)(slab_idx, t_sorted, xg)
     return xin, slab_idx, t_sorted, w_sorted, keep
 
 
@@ -184,7 +170,7 @@ def moe_apply_grouped(p, x, cfg, capacity_factor: float = 1.25,
             Sc = cand
             break
     T = (B // G) * Sc
-    cap = int(capacity_factor * T * k / E) + 1
+    cap = expert_capacity(capacity_factor, T, k, E)
 
     def one_chunk(_, xc):                               # xc: (B, Sc, d)
         xg = constrain(xc.reshape(G, T, d), "dp", None, None)
@@ -256,25 +242,21 @@ def moe_apply_ep(p, x, cfg, capacity_factor: float = 1.25,
         # xl: (B_loc, S, d); wi/wg/wo: (E_loc, ...) this device's experts
         B_loc = xl.shape[0]
         T = B_loc * Sc
-        cap = int(capacity_factor * T * k / E) + 1
+        cap = expert_capacity(capacity_factor, T, k, E)
         e0 = jax.lax.axis_index(tp) * E_loc
 
         def chunk(_, xc):
             xf = xc.reshape(T, d)
             logits = xf.astype(jnp.float32) @ router
-            wgt, idx = jax.lax.top_k(logits, k)
-            wgt = jax.nn.softmax(wgt, axis=-1).astype(xf.dtype)
-            flat_e = idx.reshape(T * k).astype(jnp.int32)
-            flat_w = wgt.reshape(T * k)
-            tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
-            e_sorted, (t_sorted, w_sorted) = engine.sort(
-                flat_e, values=(tok, flat_w), stable=True, descending=False)
-            pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - jnp.searchsorted(
-                e_sorted, e_sorted, side="left").astype(jnp.int32)
-            mine = (e_sorted >= e0) & (e_sorted < e0 + E_loc)
-            keep = (pos_in_e < cap) & mine
-            slab_idx = jnp.where(keep, (e_sorted - e0) * cap + pos_in_e,
-                                 E_loc * cap)
+            # fused routing of the replicated tokens; each model-shard then
+            # masks down to its own expert band. slabs are e*cap + pos, so
+            # re-basing to this shard's slab buffer is one subtraction.
+            route = engine.moe_route(logits, k, cap)
+            t_sorted = route.tokens
+            w_sorted = route.weights.astype(xf.dtype)
+            mine = (route.experts >= e0) & (route.experts < e0 + E_loc)
+            keep = route.keep & mine
+            slab_idx = jnp.where(keep, route.slabs - e0 * cap, E_loc * cap)
             xin = jnp.zeros((E_loc * cap + 1, d), xf.dtype) \
                 .at[slab_idx].set(xf[t_sorted])
             xin = xin[:-1].reshape(E_loc, cap, d)

@@ -35,6 +35,15 @@ What gets recorded (the event taxonomy — DESIGN.md §7.1):
 - ``sharded.exec``        the cap-ladder rung the ``lax.switch`` actually
   took, the pmax'd needed cap, and the overflow flag (via
   ``jax.debug.callback`` — one event per participating device)
+- ``moe.route``           one per ``engine.moe_route`` call: group/token/
+  expert geometry, k, capacity, and the serving variant — its count is the
+  one-pallas_call-per-chunk claim (DESIGN.md §9); the companion
+  ``moe.dropped_tokens`` counter tallies pairs past capacity per execution
+  (debug callback)
+- ``moe.route_ep.plan``   the expert-parallel geometry: device count, local
+  tokens, candidate cap, and the local route variant
+- ``moe.route_ep.exec``   owner-side merge outcome per device per run:
+  arrived candidates and globally-dropped pairs (debug callback)
 
 Span timers (``obs.span``) record host wall time into bounded histograms
 and, when a profiler is attached, open a ``jax.profiler.TraceAnnotation``

@@ -63,7 +63,10 @@ def stats_line(step: int, window_s, batch: int,
     p99 = percentile(ws, 99) * 1e3
     tput = batch * len(ws) / sum(ws) if ws and sum(ws) > 0 else 0.0
     c = counters or {}
-    return (f"[stats] step={step} p50={p50:.2f}ms p99={p99:.2f}ms "
+    line = (f"[stats] step={step} p50={p50:.2f}ms p99={p99:.2f}ms "
             f"tok_s={tput:.1f} cache_hit={c.get('plan_cache.hit', 0)} "
             f"cache_miss={c.get('plan_cache.miss', 0)} "
             f"fallback={c.get('plan_cache.fallback', 0)}")
+    if "moe.dropped_tokens" in c:        # only when MoE routing ran observed
+        line += f" moe_drops={c['moe.dropped_tokens']}"
+    return line

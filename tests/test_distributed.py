@@ -371,3 +371,89 @@ def test_gpipe_matches_sequential():
         print("OK", d_)
     """)
     assert "OK" in out
+
+
+def test_moe_route_ep_matches_global_route():
+    """Expert-parallel routing (DESIGN.md §9): per-owner results must equal
+    the unsharded ``engine.moe_route`` on the gathered logits — kept set,
+    stable order, weights, and slab positions, pair for pair — and the kept
+    set must equal a LITERAL ``engine.sharded_topk`` of earliest-stable-rank
+    pairs per expert (the union-of-local-top-k lemma the local capacity
+    prefilter rides)."""
+    out = _run("""
+        from repro import engine
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        T, E, k, cap = 128, 16, 2, 5
+        logits = jax.random.normal(jax.random.PRNGKey(0), (T, E),
+                                   jnp.float32)
+        shard = engine.moe_route_ep(logits, k, cap, mesh, "data")
+        glob = engine.moe_route(logits, k, cap)
+        P_, E_loc = 8, E // 8
+        A = shard.experts.shape[0] // P_
+        ge, gp, gw, gk, gs = (np.asarray(v) for v in
+                              (glob.experts, glob.perm, glob.weights,
+                               glob.keep, glob.slabs))
+        for d in range(P_):
+            lane = slice(d * A, (d + 1) * A)
+            cnt = int(shard.count[d])
+            perm_d = np.asarray(shard.perm[lane][:cnt])
+            keep_d = np.asarray(shard.keep[lane][:cnt])
+            w_d = np.asarray(shard.weights[lane][:cnt])
+            s_d = np.asarray(shard.slabs[lane][:cnt])
+            t_d = np.asarray(shard.tokens[lane][:cnt])
+            mine = ((ge // E_loc) == d) & gk
+            got = set(map(int, perm_d[keep_d]))
+            want = set(map(int, gp[mine]))
+            assert got == want, (d, got ^ want)
+            o, g = np.argsort(perm_d[keep_d]), np.argsort(gp[mine])
+            assert (w_d[keep_d][o] == gw[mine][g]).all()
+            assert (s_d[keep_d][o] == gs[mine][g] - d * E_loc * cap).all()
+            assert (t_d[keep_d][o] == gp[mine][g] // k).all()
+
+        # literal sharded_topk cross-check: for one expert, the kept pairs
+        # are the global top-cap by EARLIEST stable pair rank
+        e_sel = 3
+        _, idx = jax.lax.top_k(logits, k)
+        pair_e = np.asarray(idx).reshape(T * k)
+        score = jnp.where(jnp.asarray(pair_e) == e_sel,
+                          -jnp.arange(T * k, dtype=jnp.int32),
+                          jnp.iinfo(jnp.int32).min)
+        vals, gidx = engine.sharded_topk(score, cap, mesh, "data")
+        vals, gidx = np.asarray(vals), np.asarray(gidx)
+        topk_kept = set(map(int, gidx[vals != np.iinfo(np.int32).min]))
+        route_kept = set(map(int, gp[(ge == e_sel) & gk]))
+        assert topk_kept == route_kept, (topk_kept, route_kept)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_moe_route_ep_variants_and_edges():
+    """Both local-route variants agree on the wire format; cap=1 and slack
+    capacity edges hold under sharding."""
+    out = _run("""
+        from repro import engine
+        mesh = jax.make_mesh((4,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,),
+                             devices=jax.devices()[:4])
+        T, E, k = 64, 8, 2
+        logits = jax.random.normal(jax.random.PRNGKey(2), (T, E),
+                                   jnp.float32)
+        for cap in (1, T * k):
+            a = engine.moe_route_ep(logits, k, cap, mesh, "data",
+                                    variant="xla")
+            b = engine.moe_route_ep(logits, k, cap, mesh, "data",
+                                    variant="fused")
+            for la, lb in zip(a, b):
+                assert (np.asarray(la) == np.asarray(lb)).all()
+            glob = engine.moe_route(logits, k, cap)
+            n_kept = int(np.asarray(a.keep).sum())
+            assert n_kept == int(np.asarray(glob.keep).sum())
+            if cap == T * k:
+                assert n_kept == T * k      # slack capacity drops nothing
+            else:
+                assert n_kept <= E          # one pair per expert at cap=1
+        print("OK")
+    """)
+    assert "OK" in out
