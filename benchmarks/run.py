@@ -49,8 +49,9 @@ def main(argv=None) -> None:
 
     from benchmarks import (argsort_bench, external_sort_bench, fig14_w_sweep,
                             fig15_full_sort, kernel_merge, merge_tree_bench,
-                            moe_dispatch, moe_route_bench, sharded_sort_bench,
-                            skew_balance, table2_comparators)
+                            moe_dispatch, moe_route_bench, serve_bench,
+                            sharded_sort_bench, skew_balance,
+                            table2_comparators)
     sections = [(table2_comparators, "Table 2 (comparator counts)"),
                 (fig14_w_sweep, "Fig 14 (throughput vs w)"),
                 (fig15_full_sort, "Fig 15 (complete sort)"),
@@ -61,7 +62,8 @@ def main(argv=None) -> None:
                 (moe_dispatch, "MoE dispatch via repro.engine"),
                 (moe_route_bench, "DESIGN §9 (fused MoE routing op)"),
                 (sharded_sort_bench, "S8.2 (sharded sample sort, 8 devices)"),
-                (external_sort_bench, "DESIGN §8 (out-of-core external sort)")]
+                (external_sort_bench, "DESIGN §8 (out-of-core external sort)"),
+                (serve_bench, "DESIGN §10 (continuous-batching serve)")]
     if args.only:
         keys = [s.strip() for s in args.only.split(",") if s.strip()]
         sections = [(m, l) for m, l in sections

@@ -8,9 +8,10 @@ autotunable variant/parameter cache.
 from repro.engine.api import (MergeSchedule, Plan, RouteResult, argsort,
                               autotune, clear_plans, external_sort,
                               load_plans, merge, merge_runs, moe_route,
-                              moe_route_ep, save_plans, segment_argsort,
-                              segment_merge, segment_sort, sharded_sort,
-                              sharded_topk, sort, topk)
+                              moe_route_ep, sample_minp, sample_topp,
+                              save_plans, segment_argsort, segment_merge,
+                              segment_sort, sharded_sort, sharded_topk,
+                              sort, topk)
 from repro.engine.planner import (Planner, default_planner, heuristic_plan,
                                   plan_key)
 from repro.engine.segments import (lengths_from_offsets, offsets_from_lengths,
@@ -26,6 +27,7 @@ __all__ = [
     "lengths_from_offsets", "load_plans", "merge", "merge_runs", "moe_route",
     "moe_route_ep",
     "offsets_from_lengths", "pad_segments", "plan_key", "registry",
+    "sample_minp", "sample_topp",
     "save_plans", "schedule", "segment_argsort", "segment_ids",
     "segment_merge", "segment_sort", "segment_sort_oracle", "sharded",
     "sharded_sort", "sharded_topk", "sort", "topk", "unpad_segments",

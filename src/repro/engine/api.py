@@ -22,6 +22,8 @@ and ``argsort`` / ``segment_argsort`` return the stable permutation itself.
     s     = engine.segment_sort(values, offsets) # ragged batch, one kernel
     perm  = engine.segment_argsort(keys, offsets)  # local stable perms
     m     = engine.merge_runs(keys, run_offsets)   # K sorted runs -> one
+    tok   = engine.sample_topp(key, logits, 0.9) # nucleus over the KV sort
+    tok   = engine.sample_minp(key, logits, 0.1) # min-p over the same prefix
     res   = engine.sharded_sort(xs, mesh)        # mesh-sharded sample sort
     v, i  = engine.sharded_topk(xs, 16, mesh)    # global top-k on the mesh
     r     = engine.moe_route(logits, k=2, capacity=64)  # fused MoE routing:
@@ -45,7 +47,8 @@ from repro.engine.schedule import MergeSchedule, default_interpret as _interpret
 
 __all__ = [
     "sort", "argsort", "merge", "topk", "segment_sort", "segment_merge",
-    "segment_argsort", "merge_runs", "external_sort", "sharded_sort",
+    "segment_argsort", "merge_runs", "external_sort", "sample_topp",
+    "sample_minp", "sharded_sort",
     "sharded_topk", "moe_route", "moe_route_ep", "RouteResult",
     "autotune", "save_plans", "load_plans", "clear_plans",
     "Plan", "MergeSchedule",
@@ -72,6 +75,9 @@ def infer_key(op: str, *args):
     if op in ("sort", "argsort", "topk", "external_sort"):
         x = args[0]
         return plan_key(op, n=x.shape[-1], dtype=x.dtype)
+    if op in ("sample_topp", "sample_minp"):
+        logits = args[1]                      # args are (key, logits, p)
+        return plan_key(op, n=logits.shape[-1], dtype=logits.dtype)
     if op in ("segment_sort", "segment_argsort", "merge_runs"):
         values, offsets = args[:2]
         return plan_key(op, n=values.shape[0], dtype=values.dtype,
@@ -257,6 +263,52 @@ def topk(x, k: int, *, values=None, plan: Optional[Plan] = None,
     plan = _resolve("topk", plan, variant, x)
     return registry.call("topk", plan.variant, x, k, plan=plan,
                          values=values, interpret=_interpret())
+
+
+def _sample_sorted(op: str, key, logits, knob: float, temperature, plan,
+                   variant):
+    if not 0.0 < knob <= 1.0:
+        name = "p" if op == "sample_topp" else "min_p"
+        raise ValueError(f"{op}: {name}={knob} outside (0, 1]")
+    squeeze = logits.ndim == 1
+    if squeeze:
+        logits = logits[None]
+    if logits.ndim != 2:
+        raise ValueError(f"{op} expects (V,) or (B, V) logits, got shape "
+                         f"{logits.shape}")
+    plan = _resolve(op, plan, variant, key, logits, knob)
+    out = registry.call(op, plan.variant, key, logits, float(knob),
+                        plan=plan, temperature=float(temperature),
+                        interpret=_interpret())
+    return out[0] if squeeze else out
+
+
+def sample_topp(key, logits, p: float, *, temperature: float = 1.0,
+                plan: Optional[Plan] = None, variant: Optional[str] = None):
+    """Nucleus (top-p) sampling: one token id per row of ``logits``.
+
+    A thin op over the sorted-prefix-sum of the engine KV sort: the row is
+    stable-argsorted descending (``'flims'`` lanes or ``'xla'``,
+    planner's choice — identical permutations, so the variants agree
+    bit-for-bit), the softmax prefix-sum cuts the smallest candidate set
+    whose mass reaches ``p`` (the argmax always survives), and a Gumbel-max
+    draw picks within it. ``temperature <= 0`` degenerates to greedy.
+    Returns int32 token ids shaped ``logits.shape[:-1]``.
+    """
+    return _sample_sorted("sample_topp", key, logits, p, temperature, plan,
+                          variant)
+
+
+def sample_minp(key, logits, min_p: float, *, temperature: float = 1.0,
+                plan: Optional[Plan] = None, variant: Optional[str] = None):
+    """Min-p sampling: one token id per row of ``logits``.
+
+    Same sorted-prefix formulation as :func:`sample_topp`, with the cut
+    keeping candidates whose probability is at least ``min_p`` times the
+    row maximum's. Returns int32 token ids shaped ``logits.shape[:-1]``.
+    """
+    return _sample_sorted("sample_minp", key, logits, min_p, temperature,
+                          plan, variant)
 
 
 def segment_sort(keys, offsets, *, descending: bool = True, values=None,

@@ -106,7 +106,8 @@ def heuristic_plan(op: str, key: Key) -> Plan:
                  "merge_runs": "tree_pallas",
                  "external_sort": "stream_pallas",
                  "sharded_sort": "tree_pallas", "sharded_topk": "flims",
-                 "moe_route": "fused", "moe_route_ep": "fused"}
+                 "moe_route": "fused", "moe_route_ep": "fused",
+                 "sample_topp": "flims", "sample_minp": "flims"}
         # fuse two tree levels per pass by default on the real hardware
         levels = 2 if op in ("merge_runs", "sharded_sort",
                              "external_sort") else 1
@@ -118,7 +119,8 @@ def heuristic_plan(op: str, key: Key) -> Plan:
                  "segment_sort": "xla", "segment_argsort": "xla",
                  "merge_runs": "xla", "external_sort": "xla",
                  "sharded_sort": "xla", "sharded_topk": "xla",
-                 "moe_route": "xla", "moe_route_ep": "xla"}
+                 "moe_route": "xla", "moe_route_ep": "xla",
+                 "sample_topp": "xla", "sample_minp": "xla"}
         levels = 1
     return Plan(variant=table[op], w=w, block_out=block_out, chunk=256,
                 levels=levels)

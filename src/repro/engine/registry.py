@@ -160,6 +160,55 @@ def _topk_xla(x, k, *, plan, interpret, values=None):
 
 
 # --------------------------------------------------------------------------
+# sample_topp / sample_minp: token sampling as a thin mask over the
+# sorted-prefix-sum of the stable KV argsort (DESIGN.md §10) — the variant
+# names the sort that produces the descending prefix; the nucleus/min-p
+# cut and the Gumbel-max draw are shared elementwise math, so variants
+# agree bit-for-bit (stable sorts yield identical permutations)
+# --------------------------------------------------------------------------
+
+def _sample_sorted_prefix(key, logits, perm, *, temperature, top_p, min_p):
+    from repro.serve.sampler import SamplingState, sorted_prefix_sample
+    state = SamplingState.full(logits.shape[0], temperature=temperature,
+                               top_p=top_p, min_p=min_p)
+    svals = jnp.take_along_axis(logits, perm, axis=-1)
+    return sorted_prefix_sample(key, svals, perm, state)
+
+
+def _full_sort_perm(variant, logits, plan, interpret):
+    if variant == "flims":
+        from repro.core.mergesort import flims_argsort
+        fn = lambda row: flims_argsort(row, chunk=plan.chunk, w=plan.w,
+                                       descending=True)
+        return jax.vmap(fn)(logits)
+    return jnp.argsort(logits, axis=-1, stable=True,
+                       descending=True).astype(jnp.int32)
+
+
+def _sample_topp_with(variant):
+    def fn(key, logits, p, *, plan, temperature=1.0, interpret):
+        perm = _full_sort_perm(variant, logits, plan, interpret)
+        return _sample_sorted_prefix(key, logits, perm,
+                                     temperature=temperature, top_p=p,
+                                     min_p=0.0)
+    return fn
+
+
+def _sample_minp_with(variant):
+    def fn(key, logits, mp, *, plan, temperature=1.0, interpret):
+        perm = _full_sort_perm(variant, logits, plan, interpret)
+        return _sample_sorted_prefix(key, logits, perm,
+                                     temperature=temperature, top_p=1.0,
+                                     min_p=mp)
+    return fn
+
+
+for _v in ("flims", "xla"):
+    register("sample_topp", _v)(_sample_topp_with(_v))
+    register("sample_minp", _v)(_sample_minp_with(_v))
+
+
+# --------------------------------------------------------------------------
 # moe_route: fused MoE routing — logits to permuted capacity slabs
 # --------------------------------------------------------------------------
 

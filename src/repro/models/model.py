@@ -172,20 +172,16 @@ def sample_topk(key, logits, k: int = 64, temperature: float = 1.0,
                 use_flims: bool = None):
     """logits: (B, V) → sampled token ids (B,).
 
-    Top-k selection goes through ``repro.engine`` — the planner picks the
-    FLiMS merge-tree or ``lax.top_k`` per backend; ``use_flims`` pins the
+    Single-segment wrapper over the serve subsystem's ragged sampling core
+    (:func:`repro.serve.sampler.sorted_prefix_sample`): one engine KV top-k
+    call, then Gumbel-max over the sorted prefix — greedy
+    (``temperature <= 0``) is index 0 of the same prefix, bit-for-bit
+    ``argmax`` under the shared tie order. ``use_flims`` pins the top-k
     variant (True → 'flims', False → 'xla', None → planner's choice).
     """
     from repro import engine
-    if temperature <= 0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    from repro.serve.sampler import SamplingState, sorted_prefix_sample
     variant = None if use_flims is None else ("flims" if use_flims else "xla")
-    # KV top-k: the token ids ride the payload lanes through the FLiMS
-    # selector tree alongside the logits (engine.topk(values=...)).
-    toks = jnp.broadcast_to(
-        jnp.arange(logits.shape[-1], dtype=jnp.int32), logits.shape)
-    vals, _, toks_k = engine.topk(logits, k, variant=variant, values=toks)
-    gumbel = -jnp.log(-jnp.log(
-        jax.random.uniform(key, vals.shape, minval=1e-9, maxval=1.0)))
-    choice = jnp.argmax(vals / temperature + gumbel, axis=-1)
-    return jnp.take_along_axis(toks_k, choice[:, None], axis=-1)[:, 0]
+    vals, idx = engine.topk(logits, min(k, logits.shape[-1]), variant=variant)
+    state = SamplingState.full(logits.shape[0], temperature=temperature)
+    return sorted_prefix_sample(key, vals, idx.astype(jnp.int32), state)

@@ -44,6 +44,16 @@ What gets recorded (the event taxonomy — DESIGN.md §7.1):
   tokens, candidate cap, and the local route variant
 - ``moe.route_ep.exec``   owner-side merge outcome per device per run:
   arrived candidates and globally-dropped pairs (debug callback)
+- ``serve.admit`` / ``serve.retire``  one per scheduler admission /
+  retirement: request uid, slot, prompt/output length, finish reason
+  (DESIGN.md §10); the companion counters ``serve.submitted`` /
+  ``serve.admitted`` / ``serve.retired`` / ``serve.tokens`` tally request
+  flow and emitted tokens, and ``serve.trace`` counts decode/prefill
+  compilations (trace-time increment — the no-retrace acceptance contract
+  reads it). Gauges ``serve.live_slots`` / ``serve.waiting`` /
+  ``serve.kv_free`` / ``serve.traces`` track occupancy; span timers
+  ``serve.step`` / ``serve.prefill`` feed the p50/p99 the serving stats
+  line reports.
 
 Span timers (``obs.span``) record host wall time into bounded histograms
 and, when a profiler is attached, open a ``jax.profiler.TraceAnnotation``

@@ -70,3 +70,22 @@ def stats_line(step: int, window_s, batch: int,
     if "moe.dropped_tokens" in c:        # only when MoE routing ran observed
         line += f" moe_drops={c['moe.dropped_tokens']}"
     return line
+
+
+def serve_stats_line(snap: dict, step: Optional[int] = None) -> str:
+    """One periodic serving-stats line sourced entirely from the obs
+    registry (requires ``obs.enable()``): step-latency percentiles from the
+    ``serve.step`` span-timer histogram — not an ad-hoc wall-time list —
+    throughput from the ``serve.tokens`` counter over the timer total, and
+    the scheduler occupancy gauges."""
+    t = snap.get("timers", {}).get("serve.step") or {}
+    c = snap.get("counters", {})
+    g = snap.get("gauges", {})
+    total_s = t.get("total_us", 0.0) / 1e6
+    tok_s = c.get("serve.tokens", 0) / total_s if total_s > 0 else 0.0
+    return (f"[serve] step={step if step is not None else t.get('count', 0)} "
+            f"p50={_fmt_us(t.get('p50_us', 0.0))} "
+            f"p99={_fmt_us(t.get('p99_us', 0.0))} tok_s={tok_s:.1f} "
+            f"live={g.get('serve.live_slots', 0)} "
+            f"waiting={g.get('serve.waiting', 0)} "
+            f"traces={g.get('serve.traces', 0)}")

@@ -1,0 +1,26 @@
+"""``repro.serve`` — continuous-batching serving on the engine's ragged ops.
+
+The multi-tenant decode path (DESIGN.md §10): a :class:`Scheduler` admits
+and retires requests continuously against a static padded super-batch (no
+shape ever retraces), KV residency lives behind a vLLM-``KVConnectorBase``-
+style insert/lookup interface (:class:`SlotKVCache`), and every live
+request's decode step samples through ONE batched engine KV top-k call
+(:class:`RaggedSampler`) with Träff-stable tie order preserved across batch
+recomposition.
+
+    from repro.serve import Request, SamplingParams, serve_batch
+    done, dt, sched = serve_batch(model, params, reqs,
+                                  n_slots=64, max_seq=256)
+"""
+from repro.serve.kv_cache import KVConnectorBase, SlotKVCache
+from repro.serve.request import Completion, Request, SamplingParams
+from repro.serve.sampler import (RaggedSampler, SamplingState,
+                                 prefix_keep_mask, sorted_prefix_sample)
+from repro.serve.scheduler import DecodeState, Scheduler, serve_batch
+
+__all__ = [
+    "Completion", "DecodeState", "KVConnectorBase", "RaggedSampler",
+    "Request", "SamplingParams", "SamplingState", "Scheduler",
+    "SlotKVCache", "prefix_keep_mask", "serve_batch",
+    "sorted_prefix_sample",
+]

@@ -1,0 +1,138 @@
+"""KV-cache residency for continuous batching: slots behind an
+insert/lookup connector interface (DESIGN.md §10).
+
+The scheduler never touches cache pytrees directly — it talks to a
+:class:`KVConnectorBase`, the same shape as vLLM's ``KVConnectorBase``:
+``allocate``/``free`` manage slot residency, ``insert`` commits a prefilled
+single-request cache into a slot, and ``lookup`` is the prefix-reuse /
+offload hook (a connector backed by a host-memory pool or a remote tier
+implements it; the in-HBM :class:`SlotKVCache` returns ``None``).
+
+:class:`SlotKVCache` is the default connector: one static super-batch cache
+pytree (``model.init_cache(n_slots, max_seq)``) plus a free-list slot
+allocator. The batch axis of every leaf is discovered structurally — the
+cache is built for two widths under ``jax.eval_shape`` and the differing
+dimension per leaf is the slot axis — so attention (L, B, W, K, hd),
+mamba/xlstm recurrent state, and hybrid caches all work without
+per-architecture code. ``insert`` is one jitted ``dynamic_update_slice``
+scatter compiled once; the slot index is a traced scalar, so admission
+never retraces anything.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import obs
+
+
+class KVConnectorBase:
+    """Residency interface between the scheduler and KV storage.
+
+    Mirrors the role of vLLM's ``KVConnectorBase``: the scheduler asks for a
+    slot, inserts a prefilled cache, and frees the slot on retirement.
+    Subclasses may implement ``lookup`` to serve a previously-seen prefix
+    (prefix caching / cache offload) instead of recomputing prefill.
+    """
+
+    #: the live super-batch cache pytree the decode step threads through
+    cache: Any
+
+    def allocate(self) -> Optional[int]:
+        """Claim a free slot id, or ``None`` when the batch is full."""
+        raise NotImplementedError
+
+    def free(self, slot: int) -> None:
+        """Return a slot to the free list (called on retirement)."""
+        raise NotImplementedError
+
+    def insert(self, slot: int, subcache) -> None:
+        """Commit a single-request cache (batch-1 leaves) into ``slot``."""
+        raise NotImplementedError
+
+    def lookup(self, request) -> Optional[Any]:
+        """Prefix-reuse hook: a cached entry for this request's prompt, or
+        ``None`` to prefill from scratch. The base connector has no reuse."""
+        return None
+
+    def swap(self, cache) -> None:
+        """Adopt the cache pytree returned by a decode step."""
+        raise NotImplementedError
+
+
+def _batch_axes(build, n_a: int = 2, n_b: int = 3):
+    """Per-leaf slot-axis pytree, discovered by diffing abstract cache
+    shapes at two batch widths (only the batch dimension can differ)."""
+    sa = jax.eval_shape(lambda: build(n_a))
+    sb = jax.eval_shape(lambda: build(n_b))
+
+    def one(a, b):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(diff) != 1:
+            raise ValueError(
+                f"cache leaf {a.shape} vs {b.shape}: expected exactly one "
+                f"batch-dependent dimension, found {len(diff)}")
+        return diff[0]
+
+    return jax.tree.map(one, sa, sb)
+
+
+class SlotKVCache(KVConnectorBase):
+    """Static super-batch KV residency: ``n_slots`` rows of
+    ``model.init_cache(n_slots, max_seq)`` behind a free-list allocator."""
+
+    def __init__(self, model, n_slots: int, max_seq: int, **cache_kw):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.n_slots = int(n_slots)
+        self.max_seq = int(max_seq)
+        build = lambda b: model.init_cache(b, max_seq, **cache_kw)
+        self.cache = build(self.n_slots)
+        self._axes = _batch_axes(build)
+        self._free: List[int] = list(range(self.n_slots))
+        axes = self._axes
+
+        @jax.jit
+        def scatter(cache, sub, slot):
+            def one(leaf, s, ax):
+                starts = [jnp.int32(0)] * leaf.ndim
+                starts[ax] = slot
+                return lax.dynamic_update_slice(leaf, s.astype(leaf.dtype),
+                                                tuple(starts))
+            return jax.tree.map(one, cache, sub, axes)
+
+        self._scatter = scatter
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_slots(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def allocate(self) -> Optional[int]:
+        if not self._free:
+            return None
+        slot = self._free.pop(0)
+        obs.gauge("serve.kv_free", len(self._free))
+        return slot
+
+    def free(self, slot: int) -> None:
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} outside [0, {self.n_slots})")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-freed")
+        self._free.append(slot)
+        self._free.sort()            # prefer low slots: stable, debuggable
+        obs.gauge("serve.kv_free", len(self._free))
+
+    def insert(self, slot: int, subcache) -> None:
+        self.cache = self._scatter(self.cache, subcache,
+                                   jnp.int32(slot))
+
+    def swap(self, cache) -> None:
+        self.cache = cache

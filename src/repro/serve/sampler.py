@@ -1,0 +1,115 @@
+"""Ragged sampling: every live request's logits through ONE engine call.
+
+The whole super-batch samples with a single ``engine.topk`` KV call per
+decode step — the FLiMS selector tree (or ``lax.top_k``, planner's choice)
+returns each row's descending top-``k`` prefix with ties to the lower token
+id, exactly ``lax.top_k``'s stable order (Träff tie semantics: batch
+recomposition never reorders equal keys). Everything request-specific —
+greedy, per-slot top-k cut, nucleus top-p, min-p, temperature — is pure
+elementwise masking of that shared sorted prefix (:func:`sorted_prefix_
+sample`), so admitting a greedy request next to a nucleus request costs
+nothing and retraces nothing.
+
+Greedy and sampled paths share one formulation: greedy is "choose index 0
+of the sorted prefix", which is bit-for-bit ``argmax`` under the same tie
+order. The same core serves the engine's standalone full-vocab
+``sample_topp`` / ``sample_minp`` ops (their sort is the engine KV argsort
+instead of top-k).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class SamplingState(NamedTuple):
+    """Per-slot sampling parameters as device arrays (all shaped (B,)) —
+    the mutable row contents of the static super-batch, updated in place on
+    admission and never a traced-shape change."""
+    temperature: jax.Array   # f32; <= 0 -> greedy (index 0 of the prefix)
+    top_k: jax.Array         # int32; 0 -> the sampler's full prefix width
+    top_p: jax.Array         # f32; >= 1 -> off
+    min_p: jax.Array         # f32; 0 -> off
+
+    @classmethod
+    def full(cls, batch: int, *, temperature: float = 1.0, top_k: int = 0,
+             top_p: float = 1.0, min_p: float = 0.0) -> "SamplingState":
+        return cls(jnp.full((batch,), temperature, jnp.float32),
+                   jnp.full((batch,), top_k, jnp.int32),
+                   jnp.full((batch,), top_p, jnp.float32),
+                   jnp.full((batch,), min_p, jnp.float32))
+
+    def set_row(self, slot: int, p) -> "SamplingState":
+        """Write one request's ``SamplingParams`` into row ``slot`` (eager
+        ``.at[].set`` updates — host-side admission code, not traced)."""
+        return SamplingState(
+            self.temperature.at[slot].set(p.temperature),
+            self.top_k.at[slot].set(p.top_k),
+            self.top_p.at[slot].set(p.top_p),
+            self.min_p.at[slot].set(p.min_p))
+
+
+def prefix_keep_mask(svals, state: SamplingState):
+    """Candidate mask over a descending sorted prefix ``svals`` (B, K):
+    per-row top-k cut, nucleus (exclusive prefix-sum of the softmax under
+    ``top_p``), and min-p — index 0 is always kept. Pure elementwise math;
+    shared by the ragged sampler and the engine sampling ops."""
+    B, K = svals.shape
+    j = jnp.arange(K, dtype=jnp.int32)[None, :]
+    kcut = jnp.where(state.top_k[:, None] > 0,
+                     jnp.minimum(state.top_k[:, None], K), K)
+    keep = j < kcut
+    # probabilities of the (temperature-scaled) kept prefix
+    t = jnp.maximum(state.temperature, 1e-6)[:, None]
+    z = jnp.where(keep, svals / t, -jnp.inf)
+    p = jax.nn.softmax(z, axis=-1)
+    cum_excl = jnp.cumsum(p, axis=-1) - p
+    # top_p >= 1 disables the cut exactly (cumsum rounding near 1.0 must
+    # not drop tail candidates when nucleus sampling is off)
+    keep &= (cum_excl < state.top_p[:, None]) | (state.top_p[:, None] >= 1.0)
+    keep &= p >= state.min_p[:, None] * p[:, :1]
+    keep |= j == 0                        # the argmax always survives
+    return keep, z
+
+
+def sorted_prefix_sample(key, svals, sidx, state: SamplingState):
+    """Sample one token per row from a descending sorted prefix.
+
+    ``svals``/``sidx`` are (B, K) sorted values and their token ids (the
+    output of the engine KV top-k or KV argsort). Returns (B,) int32 token
+    ids: Gumbel-max over the kept candidates, or index 0 for greedy rows
+    (``temperature <= 0``).
+    """
+    keep, z = prefix_keep_mask(svals, state)
+    u = jax.random.uniform(key, svals.shape, minval=1e-9, maxval=1.0)
+    gumbel = -jnp.log(-jnp.log(u))
+    score = jnp.where(keep, z + gumbel, -jnp.inf)
+    choice = jnp.argmax(score, axis=-1)
+    choice = jnp.where(state.temperature <= 0, 0, choice)
+    return jnp.take_along_axis(sidx, choice[:, None], axis=-1)[:, 0] \
+        .astype(jnp.int32)
+
+
+class RaggedSampler:
+    """The serve subsystem's sampler: one ``engine.topk`` KV call batches
+    every live slot's logits, then :func:`sorted_prefix_sample` applies the
+    per-slot parameters. ``k`` is the static candidate-prefix width every
+    request's ``top_k``/``top_p``/``min_p`` operates within; ``variant``
+    pins the engine top-k variant (``'flims'`` | ``'xla'``; ``None`` lets
+    the planner choose per backend)."""
+
+    def __init__(self, k: int = 64, variant: Optional[str] = None):
+        if k < 1:
+            raise ValueError(f"sampler prefix width k must be >= 1, got {k}")
+        self.k = int(k)
+        self.variant = variant
+
+    def sample(self, key, logits, state: SamplingState):
+        """logits: (B, V) -> (B,) int32 sampled token ids. Exactly one
+        engine call (the acceptance contract DESIGN.md §10 tests pin)."""
+        from repro import engine
+        k = min(self.k, logits.shape[-1])
+        vals, idx = engine.topk(logits, k, variant=self.variant)
+        return sorted_prefix_sample(key, vals, idx.astype(jnp.int32), state)

@@ -1,0 +1,301 @@
+"""Continuous-batching scheduler: admit/retire over a static super-batch.
+
+The decode loop never changes a traced shape (DESIGN.md §10's no-retrace
+contract): the model decodes a fixed ``(n_slots,)`` super-batch every step,
+and admission/retirement only rewrite *rows* of the state arrays and the
+KV-cache slots. One iteration is:
+
+1. **admit** — pop waiting requests into free slots (up to the per-step
+   budget): one shape-static ``lax.scan`` prefill per request (prompt padded
+   to ``prefill_len``, per-token commit mask so pad tokens never touch the
+   cache or recurrent state), then one ``KVConnectorBase.insert`` scatter.
+2. **step** — ONE jitted call: batched ``decode_step`` over all slots +
+   the :class:`~repro.serve.sampler.RaggedSampler` (one engine KV top-k for
+   the whole batch). Inactive slots decode garbage that is masked and whose
+   cache writes land on retired rows — free, and re-admission overwrites.
+3. **retire** — host-side EOS / max-new-token checks on the sampled row;
+   finished requests free their slot back to the connector.
+
+Compilation is counted at trace time (``traces`` / the ``serve.trace``
+obs counter): a full mixed-length run costs one prefill trace + one step
+trace, and mid-run admission/retirement costs zero more — the acceptance
+contract ``tests/test_serve.py`` pins.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from functools import partial
+from typing import Deque, Dict, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro import obs
+from repro.serve.kv_cache import KVConnectorBase, SlotKVCache
+from repro.serve.request import Completion, Request
+from repro.serve.sampler import RaggedSampler, SamplingState
+
+
+class DecodeState(NamedTuple):
+    """The mutable rows of the static super-batch (all leaves (B,))."""
+    last_tok: jax.Array      # int32: token each slot feeds next step
+    pos: jax.Array           # int32: position of last_tok
+    active: jax.Array        # bool: slot currently serving a request
+    sampling: SamplingState
+
+
+@dataclasses.dataclass
+class _Live:
+    """Host-side bookkeeping for one admitted request."""
+    req: Request
+    slot: int
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    steps: int = 0
+
+
+class Scheduler:
+    """Admits, decodes, and retires requests continuously.
+
+    ``model``/``params`` are the unified Model API pair (decoder archs);
+    ``n_slots`` is the static super-batch width, ``max_seq`` the cache
+    length, ``prefill_len`` the static padded prompt width every admission
+    prefills under (one compile for all prompt lengths). ``sampler``
+    defaults to a :class:`RaggedSampler` of width ``top_k_width``;
+    ``kv`` defaults to an in-HBM :class:`SlotKVCache` (pass a custom
+    :class:`KVConnectorBase` for prefix reuse / offload tiers).
+    ``admit_per_step`` bounds admissions per loop iteration (0 = fill every
+    free slot).
+    """
+
+    def __init__(self, model, params, *, n_slots: int, max_seq: int,
+                 prefill_len: int = 32, top_k_width: int = 64,
+                 variant: Optional[str] = None,
+                 sampler: Optional[RaggedSampler] = None,
+                 kv: Optional[KVConnectorBase] = None,
+                 admit_per_step: int = 0, seed: int = 0):
+        if prefill_len < 1:
+            raise ValueError("prefill_len must be >= 1")
+        self.model = model
+        self.params = params
+        self.n_slots = int(n_slots)
+        self.max_seq = int(max_seq)
+        self.prefill_len = int(prefill_len)
+        self.admit_per_step = int(admit_per_step)
+        self.sampler = sampler or RaggedSampler(top_k_width, variant)
+        self.kv = kv or SlotKVCache(model, n_slots, max_seq)
+        self.waiting: Deque[Request] = collections.deque()
+        self.live: Dict[int, _Live] = {}
+        self.completed: List[Completion] = []
+        self._key = jax.random.PRNGKey(seed)
+        self._traces = {"step": 0, "prefill": 0}
+        self.state = DecodeState(
+            last_tok=jnp.zeros((self.n_slots,), jnp.int32),
+            pos=jnp.zeros((self.n_slots,), jnp.int32),
+            active=jnp.zeros((self.n_slots,), bool),
+            sampling=SamplingState.full(self.n_slots))
+        # a pristine batch-1 cache reused as every prefill's initial carry
+        # (recurrent state must start from zeros; jit never mutates it)
+        self._zero_cache = model.init_cache(1, self.max_seq)
+        self._prefill_fn = self._build_prefill()
+        self._step_fn = self._build_step()
+
+    # -- tracing bookkeeping ----------------------------------------------
+    @property
+    def traces(self) -> int:
+        """Total compilations so far (prefill + step) — the recompile
+        counter the no-retrace acceptance contract reads."""
+        return self._traces["step"] + self._traces["prefill"]
+
+    # -- compiled paths ----------------------------------------------------
+    def _build_prefill(self):
+        model, P = self.model, self.prefill_len
+        traces = self._traces
+
+        @jax.jit
+        def prefill(params, prompt, length, cache):
+            # runs at trace time only: the recompile counter
+            traces["prefill"] += 1
+            obs.inc("serve.trace")
+
+            def body(c, inp):
+                tok, t = inp
+                _, new = model.decode_step(params, tok[None],
+                                           jnp.full((1,), t, jnp.int32), c)
+                # commit tokens 0..length-2; the last prompt token is fed
+                # by the first decode step. Pad tokens past the prompt
+                # never touch the cache or recurrent state.
+                commit = t < length - 1
+                return jax.tree.map(
+                    lambda n, o: jnp.where(commit, n, o), new, c), None
+
+            ts = jnp.arange(P, dtype=jnp.int32)
+            cache, _ = lax.scan(body, cache, (prompt, ts))
+            return cache
+
+        return prefill
+
+    def _build_step(self):
+        model, sampler = self.model, self.sampler
+        traces = self._traces
+        # donating the super-batch cache halves decode HBM residency; CPU
+        # ignores donation with a warning, so only ask where it works
+        donate = (1,) if jax.default_backend() != "cpu" else ()
+
+        @partial(jax.jit, donate_argnums=donate)
+        def step(params, cache, state, key):
+            traces["step"] += 1
+            obs.inc("serve.trace")
+            logits, cache = model.decode_step(params, state.last_tok,
+                                              state.pos, cache)
+            tok = sampler.sample(key, logits, state.sampling)
+            tok = jnp.where(state.active, tok, 0).astype(jnp.int32)
+            pos = jnp.where(state.active, state.pos + 1, state.pos)
+            return tok, DecodeState(tok, pos, state.active,
+                                    state.sampling), cache
+
+        return step
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Queue a request (validated against the static geometry)."""
+        n = len(req.prompt)
+        if n > self.prefill_len:
+            raise ValueError(
+                f"request {req.uid}: prompt length {n} exceeds the "
+                f"scheduler's static prefill_len={self.prefill_len}")
+        if n + req.max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt {n} + max_new_tokens "
+                f"{req.max_new_tokens} exceeds max_seq={self.max_seq}")
+        self.waiting.append(req)
+        obs.inc("serve.submitted")
+        obs.gauge("serve.waiting", len(self.waiting))
+
+    def admit(self) -> int:
+        """Move waiting requests into free slots (up to the per-step
+        budget). One static prefill + one slot scatter each; never
+        retraces. Returns the number admitted."""
+        budget = self.admit_per_step or self.n_slots
+        n = 0
+        while self.waiting and n < budget:
+            slot = self.kv.allocate()
+            if slot is None:
+                break
+            req = self.waiting.popleft()
+            with obs.span("serve.prefill"):
+                cached = self.kv.lookup(req)
+                if cached is None:
+                    prompt = np.zeros((self.prefill_len,), np.int32)
+                    prompt[:len(req.prompt)] = req.prompt
+                    cached = self._prefill_fn(
+                        self.params, jnp.asarray(prompt),
+                        jnp.int32(len(req.prompt)), self._zero_cache)
+                self.kv.insert(slot, cached)
+            st = self.state
+            self.state = DecodeState(
+                st.last_tok.at[slot].set(int(req.prompt[-1])),
+                st.pos.at[slot].set(len(req.prompt) - 1),
+                st.active.at[slot].set(True),
+                st.sampling.set_row(slot, req.params))
+            self.live[slot] = _Live(req, slot)
+            obs.inc("serve.admitted")
+            obs.event("serve.admit", uid=req.uid, slot=slot,
+                      prompt_len=len(req.prompt))
+            n += 1
+        obs.gauge("serve.live_slots", len(self.live))
+        obs.gauge("serve.waiting", len(self.waiting))
+        return n
+
+    # -- decode + retirement ----------------------------------------------
+    def step(self) -> np.ndarray:
+        """One continuous-batching iteration over every live slot: decode,
+        sample (one engine call), retire finished rows. Returns the host
+        copy of the sampled tokens (retired/idle rows read 0)."""
+        if not self.live:
+            raise RuntimeError("no live requests to step (admit first)")
+        self._key, sk = jax.random.split(self._key)
+        with obs.span("serve.step"):
+            tok, self.state, cache = self._step_fn(
+                self.params, self.kv.cache, self.state, sk)
+            self.kv.swap(cache)
+            tok_host = np.asarray(tok)        # blocks: full-step latency
+        obs.inc("serve.tokens", len(self.live))
+        self._retire(tok_host)
+        obs.gauge("serve.traces", self.traces)
+        return tok_host
+
+    def _retire(self, tok_host: np.ndarray) -> None:
+        st = self.state
+        for slot in list(self.live):
+            ls = self.live[slot]
+            t = int(tok_host[slot])
+            ls.tokens.append(t)
+            ls.steps += 1
+            hit_eos = ls.req.eos_id is not None and t == ls.req.eos_id
+            if not hit_eos and len(ls.tokens) < ls.req.max_new_tokens:
+                continue
+            reason = "eos" if hit_eos else "length"
+            self.completed.append(Completion(
+                uid=ls.req.uid, prompt=list(ls.req.prompt),
+                tokens=ls.tokens, finish_reason=reason, n_steps=ls.steps))
+            del self.live[slot]
+            self.kv.free(slot)
+            st = st._replace(active=st.active.at[slot].set(False))
+            obs.inc("serve.retired")
+            obs.event("serve.retire", uid=ls.req.uid, slot=slot,
+                      reason=reason, n_tokens=len(ls.tokens))
+        self.state = st
+        obs.gauge("serve.live_slots", len(self.live))
+
+    # -- driver ------------------------------------------------------------
+    def run(self, requests: Sequence[Request] = (),
+            admit_every: int = 1) -> List[Completion]:
+        """Serve until the queue and the batch drain. ``admit_every``
+        thins the admission check to every N-th iteration (admission cost
+        amortisation under heavy churn)."""
+        for r in requests:
+            self.submit(r)
+        it = 0
+        while self.waiting or self.live:
+            if it % max(admit_every, 1) == 0 or not self.live:
+                self.admit()
+            if self.live:
+                self.step()
+            it += 1
+        return self.completed
+
+    def stats(self) -> dict:
+        """Serving stats from the obs registry (requires ``obs.enable()``):
+        step-latency percentiles from the ``serve.step`` timer histogram
+        plus the serve counters/gauges."""
+        snap = obs.snapshot()
+        out = {"traces": self.traces, "live": len(self.live),
+               "waiting": len(self.waiting),
+               "completed": len(self.completed)}
+        out.update({k: v for k, v in snap.get("counters", {}).items()
+                    if k.startswith("serve.")})
+        t = snap.get("timers", {}).get("serve.step")
+        if t:
+            out["step_p50_us"] = t["p50_us"]
+            out["step_p99_us"] = t["p99_us"]
+            out["steps"] = t["count"]
+        return out
+
+
+def serve_batch(model, params, requests: Sequence[Request], *,
+                n_slots: int, max_seq: int, prefill_len: int = 32,
+                top_k_width: int = 64, variant: Optional[str] = None,
+                admit_per_step: int = 0, seed: int = 0):
+    """One-shot convenience driver: build a :class:`Scheduler`, run the
+    request list to completion, return ``(completions, wall_seconds)``."""
+    sched = Scheduler(model, params, n_slots=n_slots, max_seq=max_seq,
+                      prefill_len=prefill_len, top_k_width=top_k_width,
+                      variant=variant, admit_per_step=admit_per_step,
+                      seed=seed)
+    t0 = time.perf_counter()
+    done = sched.run(requests)
+    return done, time.perf_counter() - t0, sched

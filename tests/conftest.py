@@ -5,3 +5,15 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(42)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables():
+    """Drop jit caches after each test module. The suite compiles ~1.5k XLA
+    programs in one process; on single-core CPU runners the accumulated
+    compiled executables eventually segfault the native compiler mid-run.
+    Modules don't share jitted functions, so per-module release costs
+    nothing but keeps the long single-process run bounded."""
+    yield
+    import jax
+    jax.clear_caches()

@@ -1,0 +1,134 @@
+"""Engine sampling ops (``sample_topp`` / ``sample_minp``): statistical
+oracles against the nucleus/min-p definitions, cross-variant bitwise
+equality, and plan-key wiring."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import engine
+from repro.engine.api import infer_key
+from repro.engine.planner import heuristic_plan, plan_key
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _nucleus_set(logits_row, p):
+    """Token ids the nucleus cut may emit: descending-stable order, keep
+    while the *exclusive* prefix mass is < p (index 0 always kept)."""
+    order = np.argsort(-logits_row, kind="stable")
+    probs = np.exp(logits_row - logits_row.max())
+    probs /= probs.sum()
+    cum = 0.0
+    keep = []
+    for j, t in enumerate(order):
+        if j == 0 or cum < p:
+            keep.append(int(t))
+        cum += probs[t]
+    return set(keep)
+
+
+def _minp_set(logits_row, mp):
+    probs = np.exp(logits_row - logits_row.max())
+    probs /= probs.sum()
+    return {int(t) for t in range(len(probs))
+            if probs[t] >= mp * probs.max()}
+
+
+def test_topp_samples_stay_in_nucleus():
+    V, p = 128, 0.6
+    logits = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (V,))) * 2.0
+    allowed = _nucleus_set(logits, p)
+    seen = set()
+    for s in range(200):
+        t = engine.sample_topp(jax.random.PRNGKey(s), jnp.asarray(logits), p)
+        seen.add(int(t))
+    assert seen <= allowed
+    # the nucleus is actually explored, not collapsed to the argmax
+    assert len(seen) > 1
+
+
+def test_minp_samples_respect_threshold():
+    V, mp = 128, 0.2
+    logits = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (V,)))
+    allowed = _minp_set(logits, mp)
+    assert 1 < len(allowed) < V       # the cut actually bites both ways
+    seen = set()
+    for s in range(200):
+        t = engine.sample_minp(jax.random.PRNGKey(s), jnp.asarray(logits), mp)
+        seen.add(int(t))
+    assert seen <= allowed
+    assert len(seen) > 1
+
+
+def test_tiny_p_is_argmax():
+    logits = jax.random.normal(jax.random.PRNGKey(3), (4, 257))
+    am = jnp.argmax(logits, axis=-1)
+    for s in range(20):
+        k = jax.random.PRNGKey(100 + s)
+        np.testing.assert_array_equal(
+            np.asarray(engine.sample_topp(k, logits, 1e-9)), np.asarray(am))
+        np.testing.assert_array_equal(
+            np.asarray(engine.sample_minp(k, logits, 0.9999999)),
+            np.asarray(am))
+
+
+def test_greedy_temperature_is_argmax():
+    logits = jax.random.normal(jax.random.PRNGKey(4), (3, 300))
+    out = engine.sample_topp(KEY, logits, 0.9, temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+@pytest.mark.parametrize("op", [engine.sample_topp, engine.sample_minp])
+def test_flims_vs_xla_bitwise(op):
+    """Both variants produce the same stable descending permutation, so the
+    shared sampling math downstream is bit-for-bit identical — including on
+    heavy ties."""
+    raw = jax.random.randint(jax.random.PRNGKey(5), (6, 300), 0, 6)
+    logits = raw.astype(jnp.float32) * 0.25     # heavy ties
+    for s in range(10):
+        k = jax.random.PRNGKey(s)
+        f = op(k, logits, 0.5, variant="flims")
+        x = op(k, logits, 0.5, variant="xla")
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(x))
+
+
+def test_1d_promotion_and_validation():
+    logits = jax.random.normal(KEY, (65,))
+    t = engine.sample_topp(KEY, logits, 0.8)
+    assert t.shape == () and t.dtype == jnp.int32
+    for bad in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError):
+            engine.sample_topp(KEY, logits, bad)
+        with pytest.raises(ValueError):
+            engine.sample_minp(KEY, logits, bad)
+    with pytest.raises(ValueError):
+        engine.sample_topp(KEY, jnp.zeros((2, 2, 2)), 0.5)
+
+
+def test_plan_keys_and_heuristics():
+    logits = jnp.zeros((4, 1000), jnp.float32)
+    got = infer_key("sample_topp", KEY, logits, 0.9)
+    assert got == plan_key("sample_topp", n=1000, dtype=jnp.float32)
+    for op in ("sample_topp", "sample_minp"):
+        key_cpu = plan_key(op, n=1024, dtype=jnp.float32, backend="cpu")
+        assert heuristic_plan(op, key_cpu).variant == "xla"
+        key_tpu = plan_key(op, n=1024, dtype=jnp.float32, backend="tpu")
+        assert heuristic_plan(op, key_tpu).variant == "flims"
+
+
+def test_matches_ragged_sampler_full_vocab():
+    """The standalone op over the full-vocab argsort equals the serve
+    sampler's sorted-prefix core when the prefix is the whole vocab."""
+    from repro.serve.sampler import SamplingState, sorted_prefix_sample
+    B, V = 3, 128
+    logits = jax.random.normal(jax.random.PRNGKey(7), (B, V))
+    p = 0.7
+    got = engine.sample_topp(KEY, logits, p, variant="xla")
+    perm = jnp.argsort(logits, axis=-1, stable=True,
+                       descending=True).astype(jnp.int32)
+    svals = jnp.take_along_axis(logits, perm, axis=-1)
+    state = SamplingState.full(B, top_p=p)
+    want = sorted_prefix_sample(KEY, svals, perm, state)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
