@@ -9,6 +9,11 @@
   job uses — a 512-chip checkpoint restores onto 256 chips (elastic rescale)
   or a different parallelism layout without conversion.
 - Retention: keeps the newest ``keep`` checkpoints.
+- Robust restore (DESIGN.md §11): construction sweeps stale ``step_N.tmp``
+  debris left by a crash mid-save, and ``restore`` skips checkpoint dirs
+  with missing/unparsable ``meta.json`` or missing arrays — warning and
+  falling back to the next-newest intact step instead of dying on the
+  corpse of the newest one.
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ import json
 import os
 import shutil
 import threading
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -36,6 +42,14 @@ class CheckpointManager:
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
+        # a crash mid-save leaves step_N.tmp behind; the rename never
+        # happened, so the debris is safe to sweep
+        for d in os.listdir(directory):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                warnings.warn(f"checkpoint: sweeping stale partial save "
+                              f"{d} (crash mid-save)")
+                shutil.rmtree(os.path.join(directory, d),
+                              ignore_errors=True)
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, extra: Optional[dict] = None):
@@ -90,14 +104,45 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _load_step(self, step: int):
+        """Open one checkpoint dir; ``None`` if it is corrupt (missing or
+        unparsable ``meta.json``, missing ``arrays.npz``)."""
+        path = os.path.join(self.dir, f"step_{step}")
+        try:
+            with open(os.path.join(path, "meta.json")) as f:
+                meta = json.load(f)
+            data = np.load(os.path.join(path, "arrays.npz"))
+        except (OSError, ValueError, json.JSONDecodeError):
+            return None
+        return meta, data
+
     def restore(self, step: int, target: Any, shardings: Any = None):
         """Restore into the structure of ``target``; device_put with
         ``shardings`` (pytree of NamedSharding) if given — this is where
-        elastic resharding happens."""
-        path = os.path.join(self.dir, f"step_{step}")
-        with open(os.path.join(path, "meta.json")) as f:
-            meta = json.load(f)
-        data = np.load(os.path.join(path, "arrays.npz"))
+        elastic resharding happens.
+
+        A corrupt checkpoint dir at ``step`` (missing/unparsable meta,
+        missing arrays) is skipped with a warning and the next-newest
+        intact step restores instead; ``FileNotFoundError`` only when no
+        intact checkpoint survives."""
+        candidates = [step] + [s for s in reversed(self.all_steps())
+                               if s < step]
+        loaded = None
+        for s in candidates:
+            loaded = self._load_step(s)
+            if loaded is not None:
+                if s != step:
+                    warnings.warn(
+                        f"checkpoint: step_{step} is corrupt "
+                        "(missing/unparsable meta.json or arrays.npz); "
+                        f"falling back to intact step_{s}")
+                break
+            warnings.warn(f"checkpoint: skipping corrupt step_{s}")
+        if loaded is None:
+            raise FileNotFoundError(
+                f"no intact checkpoint at or below step {step} in "
+                f"{self.dir}")
+        meta, data = loaded
         names, leaves, treedef = _flatten(target)
         assert names == meta["names"], (
             "checkpoint tree does not match target tree")

@@ -44,6 +44,8 @@ from repro.engine import registry, segments
 from repro.engine.planner import (Plan, _key_str, default_planner, plan_key,
                                   heuristic_plan)
 from repro.engine.schedule import MergeSchedule, default_interpret as _interpret
+from repro.guard import validate as _validate
+from repro.guard import verify as _verify
 
 __all__ = [
     "sort", "argsort", "merge", "topk", "segment_sort", "segment_merge",
@@ -56,15 +58,37 @@ __all__ = [
 
 #: rank/offset lanes are int32 throughout the engine (PR 6's reduce_rows
 #: overflow was this class of bug) — reject sizes the lanes cannot index.
-_LANE_LIMIT = 2 ** 31
+_LANE_LIMIT = _validate.LANE_LIMIT
+
+# boundary guards live in repro.guard.validate; this alias keeps the
+# engine-internal call sites (and their history) readable
+_check_lane_width = _validate.check_lane_width
 
 
-def _check_lane_width(n: int, op: str) -> None:
-    if n >= _LANE_LIMIT:
-        raise ValueError(
-            f"{op}: n = {n} exceeds the engine's int32 rank/offset lanes "
-            f"(max {_LANE_LIMIT - 1}); shard the input across devices "
-            "(engine.sharded_sort) instead of scaling one lane past 2**31")
+def _gcall(op: str, plan: Plan, *args, **kw):
+    """Registry dispatch under the guard layer's variant fallback ladder
+    (guard.fallback, DESIGN.md §11): infrastructure failures demote down
+    the candidate order with quarantine; input errors propagate."""
+    from repro.guard.fallback import guarded_call
+    return guarded_call(op, plan, *args, **kw)
+
+
+def _nan_keys(op: str, keys, nan: Optional[str]):
+    """Resolve the NaN policy for one op's float keys (guard.validate).
+
+    Returns the monotone total-order int32 keys when the resolved policy is
+    ``"sort_last"`` and ``keys`` is float (the caller reroutes through the
+    int sort and gathers the floats back); ``None`` when no transform is
+    needed (int keys, ``"unsafe"``, or ``"raise"`` — which has already
+    checked and possibly raised).
+    """
+    policy = _validate.resolve_nan_policy(nan, op)
+    if policy == "unsafe" or not _validate.check_float_dtype(op, keys):
+        return None
+    if policy == "raise":
+        _validate.check_finite_keys(op, keys)
+        return None
+    return _validate.total_order_key(keys)
 
 
 def infer_key(op: str, *args):
@@ -149,7 +173,8 @@ def run_op(op: str, plan: Plan, *args):
 # --------------------------------------------------------------------------
 
 def sort(x, *, descending: bool = True, values=None, stable: bool = False,
-         plan: Optional[Plan] = None, variant: Optional[str] = None):
+         nan: Optional[str] = None, plan: Optional[Plan] = None,
+         variant: Optional[str] = None):
     """Full sort of a 1-D array.
 
     ``values=`` carries a payload pytree of ``x``-shaped leaves through the
@@ -158,7 +183,24 @@ def sort(x, *, descending: bool = True, values=None, stable: bool = False,
     observable through payloads or the permutation). Either flag routes
     through the stable ``argsort`` op, so ``plan=``/``variant=`` then name
     an *argsort* variant.
+
+    ``nan=`` sets the float-key NaN policy (``"raise"`` | ``"sort_last"`` |
+    ``"unsafe"``, default the process policy — guard.validate, DESIGN.md
+    §11). ``"sort_last"`` matches ``jnp.sort`` NaN semantics bit-for-bit:
+    NaN orders above everything (last ascending / first descending), both
+    NaN signs one tie class, ``±0.0`` one tie class, ties in input order.
     """
+    _check_lane_width(x.shape[-1], "sort")
+    ik = _nan_keys("sort", x, nan)
+    if ik is not None:
+        perm = argsort(ik, descending=descending, plan=plan, variant=variant)
+        keys = x[perm]
+        if _verify.verify_enabled():
+            _verify.check_sorted(ik[perm], descending=descending, op="sort")
+            _verify.check_permutation(x, keys, op="sort")
+        if values is None:
+            return keys
+        return keys, jax.tree.map(lambda v: v[perm], values)
     if values is not None or stable:
         perm = argsort(x, descending=descending, plan=plan, variant=variant)
         keys = x[perm]
@@ -166,26 +208,43 @@ def sort(x, *, descending: bool = True, values=None, stable: bool = False,
             return keys
         return keys, jax.tree.map(lambda v: v[perm], values)
     plan = _resolve("sort", plan, variant, x)
-    out = registry.call("sort", plan.variant, x, plan=plan,
-                        interpret=_interpret())
-    return out if descending else out[::-1]
+    out = _gcall("sort", plan, x, interpret=_interpret())
+    out = out if descending else out[::-1]
+    if _verify.verify_enabled():
+        _verify.check_sorted(out, descending=descending, op="sort")
+        _verify.check_permutation(x, out, op="sort")
+    return out
 
 
-def argsort(keys, *, descending: bool = True, plan: Optional[Plan] = None,
-            variant: Optional[str] = None):
+def argsort(keys, *, descending: bool = True, nan: Optional[str] = None,
+            plan: Optional[Plan] = None, variant: Optional[str] = None):
     """Stable argsort of 1-D keys, or row-wise over a 2-D batch.
 
     Ties keep their original order (paper algorithm 3 semantics) in every
     variant — the pure-JAX FLiMS lanes ('flims'), the KV Pallas kernels
     ('pallas'), and XLA — callers may rely on it for MoE dispatch.
+
+    ``nan="sort_last"`` runs the argsort on the monotone total-order int32
+    transform of the float keys — bit-for-bit ``jnp.argsort(stable=True)``
+    NaN semantics (guard.validate; see :func:`sort`).
     """
+    _check_lane_width(keys.shape[-1], "argsort")
+    ik = _nan_keys("argsort", keys, nan)
+    if ik is not None:
+        keys = ik
     plan = _resolve("argsort", plan, variant, keys)
-    return registry.call("argsort", plan.variant, keys, plan=plan,
-                         descending=descending, interpret=_interpret())
+    perm = _gcall("argsort", plan, keys, descending=descending,
+                  interpret=_interpret())
+    if _verify.verify_enabled():
+        _verify.check_permutation(
+            jnp.broadcast_to(jnp.arange(keys.shape[-1], dtype=jnp.int32),
+                             keys.shape), perm, op="argsort")
+    return perm
 
 
 def merge(a, b, *, descending: bool = True, values=None,
           stable: bool = False, tie: Optional[str] = None,
+          nan: Optional[str] = None,
           plan: Optional[Plan] = None, variant: Optional[str] = None):
     """Merge two sorted 1-D arrays into one sorted array.
 
@@ -200,7 +259,26 @@ def merge(a, b, *, descending: bool = True, values=None,
     variants; the partitioned Pallas kernel's key output is tie-invariant,
     so it ignores the policy. ``tie=None`` (default) inherits the plan's
     policy. Incompatible with ``stable``/``values``.
+
+    ``nan="sort_last"`` merges the monotone total-order int32 transforms of
+    the float keys with the floats riding the payload lanes — each input
+    must itself be ordered under the same policy (NaN above every real,
+    ``jnp.sort``'s order, in the call's direction). Incompatible with
+    ``tie='skew'``.
     """
+    ik_a = _nan_keys("merge", a, nan)
+    if ik_a is not None:
+        if tie == "skew":
+            raise _validate.EngineInputError(
+                "merge", 'tie="skew" is key-only and cannot combine with '
+                'nan="sort_last" (the rescue rides the payload lanes)',
+                tie="skew", nan="sort_last")
+        pay_a = {"k": a} if values is None else {"k": a, "v": values[0]}
+        pay_b = {"k": b} if values is None else {"k": b, "v": values[1]}
+        _, mv = merge(ik_a, _validate.total_order_key(b),
+                      values=(pay_a, pay_b), descending=descending,
+                      plan=plan, variant=variant)
+        return mv["k"] if values is None else (mv["k"], mv["v"])
     if values is not None or stable:
         assert tie != "skew", \
             "tie='skew' is key-only (stable order has no ties)"
@@ -211,8 +289,11 @@ def merge(a, b, *, descending: bool = True, values=None,
     plan = _resolve("merge", plan, variant, a, b)
     if tie is not None and tie != plan.tie:
         plan = plan.replace(tie=tie)
-    return registry.call("merge", plan.variant, a, b, plan=plan,
-                         interpret=_interpret())
+    out = _gcall("merge", plan, a, b, interpret=_interpret())
+    if _verify.verify_enabled():
+        _verify.check_sorted(out, descending=True, op="merge")
+        _verify.check_permutation(jnp.concatenate([a, b]), out, op="merge")
+    return out
 
 
 def _merge_kv(a, b, values, descending, plan, variant):
@@ -251,18 +332,27 @@ def _merge_kv(a, b, values, descending, plan, variant):
     return keys, vals
 
 
-def topk(x, k: int, *, values=None, plan: Optional[Plan] = None,
-         variant: Optional[str] = None):
+def topk(x, k: int, *, values=None, nan: Optional[str] = None,
+         plan: Optional[Plan] = None, variant: Optional[str] = None):
     """(values, indices) of the k largest along the trailing axis,
     values descending, ties broken by lower index (lax.top_k order).
 
     With ``values=`` (a payload pytree of ``x``-shaped leaves) returns
     ``(vals, indices, payload_topk)``: the payload rides extra lanes through
     the FLiMS selector tree (or is gathered by the XLA variant).
+
+    ``nan="sort_last"`` selects by the monotone total-order transform (NaN
+    above every real — NaN keys fill the leading slots when present,
+    matching the sort-family policy; clean rows are untouched).
     """
+    _check_lane_width(x.shape[-1], "topk")
+    ik = _nan_keys("topk", x, nan)
+    if ik is not None:
+        pay = {"k": x} if values is None else {"k": x, "v": values}
+        _, idx, pv = topk(ik, k, values=pay, plan=plan, variant=variant)
+        return (pv["k"], idx) if values is None else (pv["k"], idx, pv["v"])
     plan = _resolve("topk", plan, variant, x)
-    return registry.call("topk", plan.variant, x, k, plan=plan,
-                         values=values, interpret=_interpret())
+    return _gcall("topk", plan, x, k, values=values, interpret=_interpret())
 
 
 def _sample_sorted(op: str, key, logits, knob: float, temperature, plan,
@@ -277,9 +367,8 @@ def _sample_sorted(op: str, key, logits, knob: float, temperature, plan,
         raise ValueError(f"{op} expects (V,) or (B, V) logits, got shape "
                          f"{logits.shape}")
     plan = _resolve(op, plan, variant, key, logits, knob)
-    out = registry.call(op, plan.variant, key, logits, float(knob),
-                        plan=plan, temperature=float(temperature),
-                        interpret=_interpret())
+    out = _gcall(op, plan, key, logits, float(knob),
+                 temperature=float(temperature), interpret=_interpret())
     return out[0] if squeeze else out
 
 
@@ -313,6 +402,7 @@ def sample_minp(key, logits, min_p: float, *, temperature: float = 1.0,
 
 def segment_sort(keys, offsets, *, descending: bool = True, values=None,
                  stable: bool = False, cap: int = 0,
+                 nan: Optional[str] = None,
                  plan: Optional[Plan] = None,
                  variant: Optional[str] = None):
     """Sort every segment of a ragged batch independently.
@@ -328,7 +418,17 @@ def segment_sort(keys, offsets, *, descending: bool = True, values=None,
     ties keep input order. Both route through ``segment_argsort`` — the
     permutation comes from the rank-lane kernels and the payload is applied
     inside the engine, so consumers need no external gather round trip.
+
+    ``nan="sort_last"`` sorts each segment by the monotone total-order
+    transform (NaN last per segment ascending, ``jnp`` semantics).
     """
+    _check_lane_width(keys.shape[0], "segment_sort")
+    ik = _nan_keys("segment_sort", keys, nan)
+    if ik is not None:
+        pay = {"k": keys} if values is None else {"k": keys, "v": values}
+        _, pv = segment_sort(ik, offsets, descending=descending, values=pay,
+                             cap=cap, plan=plan, variant=variant)
+        return pv["k"] if values is None else (pv["k"], pv["v"])
     if values is not None or stable:
         offsets = jnp.asarray(offsets, jnp.int32)
         perm = segment_argsort(keys, offsets, descending=descending, cap=cap,
@@ -346,14 +446,18 @@ def segment_sort(keys, offsets, *, descending: bool = True, values=None,
                else segments.static_cap(offsets, keys.shape[0]))
         plan = plan.replace(cap=cap)
     segments.validate_cap(offsets, plan.cap)
-    out = registry.call("segment_sort", plan.variant, keys, offsets,
-                        plan=plan, interpret=_interpret())
+    out = _gcall("segment_sort", plan, keys, offsets, interpret=_interpret())
     if not descending:
         out = segments.reverse_segments(out, offsets, keys.shape[0])
+    if _verify.verify_enabled():
+        _verify.check_segments(out, offsets, descending=descending,
+                               op="segment_sort")
+        _verify.check_permutation(keys, out, op="segment_sort")
     return out
 
 
 def segment_argsort(keys, offsets, *, descending: bool = True, cap: int = 0,
+                    nan: Optional[str] = None,
                     plan: Optional[Plan] = None,
                     variant: Optional[str] = None):
     """Stable argsort of every segment of a ragged batch.
@@ -364,7 +468,14 @@ def segment_argsort(keys, offsets, *, descending: bool = True, cap: int = 0,
     algorithm 3) in every variant and either direction. This is the
     MoE-dispatch primitive: the whole ragged batch is one kernel launch, no
     flatten→argsort→gather round trip per segment.
+
+    ``nan="sort_last"`` orders each segment by the monotone total-order
+    transform — bit-for-bit per-segment ``jnp.argsort(stable=True)``.
     """
+    _check_lane_width(keys.shape[0], "segment_argsort")
+    ik = _nan_keys("segment_argsort", keys, nan)
+    if ik is not None:
+        keys = ik
     segments.validate_offsets(offsets, keys.shape[0])
     offsets = jnp.asarray(offsets, jnp.int32)
     plan = _resolve("segment_argsort", plan, variant, keys, offsets)
@@ -373,13 +484,13 @@ def segment_argsort(keys, offsets, *, descending: bool = True, cap: int = 0,
                else segments.static_cap(offsets, keys.shape[0]))
         plan = plan.replace(cap=cap)
     segments.validate_cap(offsets, plan.cap)
-    return registry.call("segment_argsort", plan.variant, keys, offsets,
-                         plan=plan, descending=descending,
-                         interpret=_interpret())
+    return _gcall("segment_argsort", plan, keys, offsets,
+                  descending=descending, interpret=_interpret())
 
 
 def merge_runs(keys, run_offsets, *, descending: bool = True, values=None,
                stable: bool = False, tie: Optional[str] = None, cap: int = 0,
+               nan: Optional[str] = None,
                plan: Optional[Plan] = None, variant: Optional[str] = None):
     """Merge K sorted runs into one sorted array (the paper's §2.1 merge
     tree as an engine op).
@@ -398,18 +509,36 @@ def merge_runs(keys, run_offsets, *, descending: bool = True, values=None,
     lanes. ``tie='skew'`` applies algorithm 2's selector on the key-only
     vmapped tree (``None`` inherits the plan's policy). ``cap`` is unused
     today and reserved for parity with the segmented ops.
+
+    ``nan="sort_last"`` merges the monotone total-order transforms with the
+    float keys riding the payload lanes (each run already ordered under the
+    same policy); incompatible with ``tie='skew'``.
     """
     del cap
     _check_lane_width(keys.shape[0], "merge_runs")
+    ik = _nan_keys("merge_runs", keys, nan)
+    if ik is not None:
+        if tie == "skew":
+            raise _validate.EngineInputError(
+                "merge_runs", 'tie="skew" is key-only and cannot combine '
+                'with nan="sort_last" (the rescue rides the payload lanes)',
+                tie="skew", nan="sort_last")
+        pay = {"k": keys} if values is None else {"k": keys, "v": values}
+        _, pv = merge_runs(ik, run_offsets, descending=descending,
+                           values=pay, plan=plan, variant=variant)
+        return pv["k"] if values is None else (pv["k"], pv["v"])
     segments.validate_offsets(run_offsets, keys.shape[0])
     run_offsets = jnp.asarray(run_offsets, jnp.int32)
     plan = _resolve("merge_runs", plan, variant, keys, run_offsets)
     if tie is not None and tie != plan.tie:
         plan = plan.replace(tie=tie)
     if values is None and not stable:
-        return registry.call("merge_runs", plan.variant, keys,
-                             run_offsets, plan=plan, descending=descending,
-                             interpret=_interpret())
+        out = _gcall("merge_runs", plan, keys, run_offsets,
+                     descending=descending, interpret=_interpret())
+        if _verify.verify_enabled():
+            _verify.check_sorted(out, descending=descending, op="merge_runs")
+            _verify.check_permutation(keys, out, op="merge_runs")
+        return out
     assert tie != "skew", "tie='skew' is key-only (stable order has no ties)"
     from repro.engine.schedule import merge_runs as _sched_merge_runs
     # rank lanes leave no ties for skew to balance: pin the stable policy
@@ -424,6 +553,7 @@ def merge_runs(keys, run_offsets, *, descending: bool = True, values=None,
 
 def external_sort(keys, *, descending: bool = True, values=None,
                   stable: bool = False, tile_elems: int = 0, fan_in: int = 0,
+                  nan: Optional[str] = None,
                   plan: Optional[Plan] = None, variant: Optional[str] = None):
     """Sort a 1-D array larger than fast memory: the TopSort two-phase
     out-of-core sort (DESIGN.md §8).
@@ -445,10 +575,18 @@ def external_sort(keys, *, descending: bool = True, values=None,
     raise ``ValueError`` — shard instead (``engine.sharded_sort``).
     """
     if keys.ndim != 1:
-        raise ValueError("external_sort expects a 1-D key array, got shape "
-                         f"{keys.shape}")
+        raise _validate.EngineInputError(
+            "external_sort", f"expects a 1-D key array, got shape "
+            f"{keys.shape}", shape=tuple(keys.shape))
     n = keys.shape[0]
     _check_lane_width(n, "external_sort")
+    ik = _nan_keys("external_sort", keys, nan)
+    if ik is not None:
+        pay = {"k": keys} if values is None else {"k": keys, "v": values}
+        _, pv = external_sort(ik, descending=descending, values=pay,
+                              tile_elems=tile_elems, fan_in=fan_in,
+                              plan=plan, variant=variant)
+        return pv["k"] if values is None else (pv["k"], pv["v"])
     from repro.engine.external import resolve_dofs
     plan = _resolve("external_sort", plan, variant, keys)
     plan = resolve_dofs(plan, n, tile_elems=tile_elems, fan_in=fan_in)
@@ -460,12 +598,16 @@ def external_sort(keys, *, descending: bool = True, values=None,
                     stable=stable)
     kv = values is not None or stable
     if not kv:
-        return registry.call("external_sort", plan.variant, keys, plan=plan,
-                             descending=descending, interpret=_interpret())
+        out = _gcall("external_sort", plan, keys, descending=descending,
+                     interpret=_interpret())
+        if _verify.verify_enabled():
+            _verify.check_sorted(out, descending=descending,
+                                 op="external_sort")
+            _verify.check_permutation(keys, out, op="external_sort")
+        return out
     ranks = jnp.arange(n, dtype=jnp.int32)
-    mk, mr = registry.call("external_sort", plan.variant, keys, plan=plan,
-                           descending=descending, ranks=ranks,
-                           interpret=_interpret())
+    mk, mr = _gcall("external_sort", plan, keys, descending=descending,
+                    ranks=ranks, interpret=_interpret())
     if values is None:
         return mk
     return mk, jax.tree.map(lambda v: v[mr], values)
@@ -490,8 +632,8 @@ def segment_merge(a, a_offsets, b, b_offsets, *, descending: bool = True,
             out, a_offsets + b_offsets, a.shape[0] + b.shape[0])
     plan = _resolve("segment_merge", plan, variant, a, a_offsets, b,
                     b_offsets)
-    return registry.call("segment_merge", plan.variant, a, a_offsets, b,
-                         b_offsets, plan=plan, interpret=_interpret())
+    return _gcall("segment_merge", plan, a, a_offsets, b, b_offsets,
+                  interpret=_interpret())
 
 
 # --------------------------------------------------------------------------
@@ -559,8 +701,8 @@ def moe_route(logits, k: int, capacity: int, *, values=None,
     obs.event("moe.route", groups=G, tokens=T, experts=E, k=k,
               capacity=int(capacity), n_pairs=G * T * k,
               variant=plan.variant)
-    out = registry.call("moe_route", plan.variant, logits, k, int(capacity),
-                        plan=plan, interpret=_interpret())
+    out = _gcall("moe_route", plan, logits, k, int(capacity),
+                 interpret=_interpret())
     e_s, t_s, perm, w_s, slab, keep = out
     keep = keep.astype(bool)
     if obs.enabled():
@@ -592,9 +734,8 @@ def moe_route_ep(logits, k: int, capacity: int, mesh, axis: str = "data", *,
     plan = _resolve("moe_route_ep", plan, variant, logits, k, capacity,
                     mesh, axis)
     plan = plan.replace(cap=int(capacity))
-    return registry.call("moe_route_ep", plan.variant, logits, k,
-                         int(capacity), mesh, axis, plan=plan,
-                         interpret=_interpret())
+    return _gcall("moe_route_ep", plan, logits, k, int(capacity), mesh,
+                  axis, interpret=_interpret())
 
 
 # --------------------------------------------------------------------------
@@ -628,8 +769,8 @@ def sharded_sort(x, mesh, axis: str = "data", *, payload=None,
     identically and stably (paper algorithm 3).
     """
     plan = _resolve("sharded_sort", plan, variant, x, mesh, axis)
-    return registry.call("sharded_sort", plan.variant, x, mesh, axis,
-                         plan=plan, interpret=_interpret(), payload=payload)
+    return _gcall("sharded_sort", plan, x, mesh, axis,
+                  interpret=_interpret(), payload=payload)
 
 
 def sharded_topk(x, k: int, mesh, axis: str = "data", *, payload=None,
@@ -644,8 +785,8 @@ def sharded_topk(x, k: int, mesh, axis: str = "data", *, payload=None,
     with the payload riding the lanes end-to-end.
     """
     plan = _resolve("sharded_topk", plan, variant, x, k, mesh, axis)
-    return registry.call("sharded_topk", plan.variant, x, k, mesh, axis,
-                         plan=plan, interpret=_interpret(), payload=payload)
+    return _gcall("sharded_topk", plan, x, k, mesh, axis,
+                  interpret=_interpret(), payload=payload)
 
 
 # --------------------------------------------------------------------------

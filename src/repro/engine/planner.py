@@ -150,6 +150,30 @@ class Planner:
         """Candidate plans recorded as unable to serve this shape bucket."""
         return frozenset(self._infeasible.get(key, ()))
 
+    # -- quarantine (guard.fallback): failed variants sit out the session --
+    def quarantine(self, key: Key, plan: "Plan") -> None:
+        """Record ``plan`` as unable to serve ``key`` for the session: the
+        autotuner skips it as known-infeasible and the fallback ladder
+        skips its rung without paying for another failure."""
+        self._infeasible.setdefault(key, set()).add(plan)
+
+    def is_quarantined(self, key: Key, variant: str) -> bool:
+        return any(p.variant == variant for p in self._infeasible.get(key, ()))
+
+    def clear_quarantine(self, variant: Optional[str] = None) -> None:
+        """Drop quarantine/infeasibility records — all of them, or only the
+        plans naming ``variant`` (used when an injected variant stub is
+        deregistered)."""
+        if variant is None:
+            self._infeasible.clear()
+            return
+        for key in list(self._infeasible):
+            kept = {p for p in self._infeasible[key] if p.variant != variant}
+            if kept:
+                self._infeasible[key] = kept
+            else:
+                del self._infeasible[key]
+
     def plan_for(self, op: str, *, n: int, dtype, segments: int = 0,
                  backend: Optional[str] = None) -> Plan:
         key = plan_key(op, n=n, dtype=dtype, backend=backend,

@@ -29,6 +29,12 @@ def register(op: str, name: str):
     return deco
 
 
+def unregister(op: str, name: str) -> None:
+    """Remove a registered variant (chaos-suite stubs clean up with this;
+    unknown names are a no-op)."""
+    _REGISTRY.get(op, {}).pop(name, None)
+
+
 def get(op: str, name: str) -> Callable:
     try:
         return _REGISTRY[op][name]

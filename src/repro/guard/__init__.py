@@ -1,0 +1,40 @@
+"""``repro.guard`` — the engine's fault-tolerance layer (DESIGN.md §11).
+
+Validate at the boundary, degrade under infrastructure failure, verify
+opt-in from inside the graph, and inject every defended-against fault on
+demand:
+
+- :mod:`repro.guard.validate` — structured :class:`EngineInputError`s,
+  the ``nan=`` policy on float-keyed ops (``"raise"`` | ``"sort_last"`` |
+  ``"unsafe"``), and the int32 lane-width guard on every op.
+- :mod:`repro.guard.fallback` — ``registry.call`` under a variant fallback
+  ladder: Mosaic/XLA/RESOURCE_EXHAUSTED failures demote down the planner's
+  candidate order to the reference variant, with session quarantine and
+  ``guard.fallback`` / ``guard.quarantine`` obs events.
+- :mod:`repro.guard.verify` — in-graph postconditions (sortedness,
+  permutation checksum, segment boundaries) behind ``REPRO_VERIFY=1`` /
+  :func:`enable_verify`; zero overhead when off.
+- :mod:`repro.guard.inject` — deterministic fault injectors for the chaos
+  suite (NaN rates, bit flips, an always-failing variant, poison serve
+  requests).
+
+    from repro import guard
+
+    guard.set_nan_policy("sort_last")     # rescue NaN keys engine-wide
+    guard.enable_verify()                 # engine checks its own output
+    y = engine.sort(x, nan="raise")       # or per call
+"""
+from repro.guard.validate import (EngineInputError, QueueFull,
+                                  RequestRejected, default_nan_policy,
+                                  set_nan_policy)
+from repro.guard.verify import (checked, disable_verify, enable_verify,
+                                failures, reset_failures, verify_enabled)
+from repro.guard.fallback import recoverable
+from repro.guard.inject import InjectedFault
+
+__all__ = [
+    "EngineInputError", "RequestRejected", "QueueFull", "InjectedFault",
+    "set_nan_policy", "default_nan_policy",
+    "enable_verify", "disable_verify", "verify_enabled", "failures",
+    "checked", "reset_failures", "recoverable",
+]

@@ -1,0 +1,128 @@
+"""Deterministic fault injection: the chaos half of the guard layer.
+
+Every failure mode the guard subsystem defends against has an injector
+here, so the chaos suite (``tests/test_chaos.py``, the CI chaos job) can
+*drive* the failure rather than wait for it (DESIGN.md §11):
+
+- :func:`with_nan` / :func:`bitflip` — corrupt float keys at a fixed rate
+  from a fixed seed (reproducible runs; the NaN-policy and verify paths).
+- :func:`failing_variant` — register a variant that always raises an
+  :class:`InjectedFault` dressed as ``RESOURCE_EXHAUSTED`` (or any message
+  you pass), exercising the fallback ladder end to end. Context manager:
+  the stub deregisters and its quarantine entries die with the session.
+- :func:`poison_model` — wrap a model so any slot fed a magic token emits
+  non-finite logits: the serve scheduler's poison-isolation path.
+
+Injectors are ordinary library code — importing this module changes
+nothing; each fault is armed explicitly and scoped to a ``with`` block or
+a wrapped object.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["InjectedFault", "with_nan", "bitflip", "failing_variant",
+           "poison_model", "POISON_TOKEN"]
+
+#: default magic token for poison_model
+POISON_TOKEN = -1
+
+
+class InjectedFault(RuntimeError):
+    """A deliberately injected infrastructure failure (recoverable by the
+    fallback ladder — see ``guard.fallback.recoverable``)."""
+
+
+def resource_exhausted(what: str = "injected") -> InjectedFault:
+    """An :class:`InjectedFault` shaped like an XLA allocator failure."""
+    return InjectedFault(
+        f"RESOURCE_EXHAUSTED: {what}: out of memory while trying to "
+        "allocate 9223372036854775807 bytes")
+
+
+# --------------------------------------------------------------------------
+# key corruption
+# --------------------------------------------------------------------------
+
+def with_nan(keys, rate: float, seed: int = 0):
+    """Replace ``rate`` of the entries of a float array with NaN
+    (deterministic in ``seed``). Always corrupts at least one entry for
+    ``rate > 0`` so a chaos assertion can't silently pass on a lucky draw."""
+    keys = jnp.asarray(keys)
+    u = jax.random.uniform(jax.random.PRNGKey(seed), keys.shape)
+    mask = u < rate
+    if rate > 0:
+        first = jnp.argmin(u)   # the most-likely-corrupt entry, forced
+        mask = mask.reshape(-1).at[first].set(True).reshape(keys.shape)
+    return jnp.where(mask, jnp.nan, keys)
+
+
+def bitflip(keys, rate: float, seed: int = 0, bit: int = 30):
+    """Flip ``bit`` of the float's bit pattern in ``rate`` of the entries
+    (deterministic in ``seed``). Bit 30 (top exponent bit) turns small
+    numbers huge and can mint NaN/inf — the nastiest single-event upset."""
+    keys = jnp.asarray(keys)
+    bits = lax.bitcast_convert_type(keys.astype(jnp.float32), jnp.int32)
+    flipped = bits ^ jnp.int32(1 << bit)
+    mask = jax.random.uniform(jax.random.PRNGKey(seed), keys.shape) < rate
+    out = jnp.where(mask, flipped, bits)
+    return lax.bitcast_convert_type(out, jnp.float32).astype(keys.dtype)
+
+
+# --------------------------------------------------------------------------
+# variant / backend faults
+# --------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def failing_variant(op: str, name: str = "chaos_fail",
+                    message: str = "injected"):
+    """Register an always-failing variant for ``op`` (dressed as
+    RESOURCE_EXHAUSTED) for the duration of the block. Pin it via
+    ``variant=name`` to drive the fallback ladder; the registration and any
+    quarantine entries it earned are removed on exit."""
+    from repro.engine import registry
+    from repro.engine.planner import default_planner
+
+    def stub(*args, **kw):
+        raise resource_exhausted(f"{op}.{name}: {message}")
+
+    registry.register(op, name)(stub)
+    try:
+        yield name
+    finally:
+        registry.unregister(op, name)
+        default_planner.clear_quarantine(variant=name)
+
+
+# --------------------------------------------------------------------------
+# serve poison
+# --------------------------------------------------------------------------
+
+class _PoisonModel:
+    """Delegating model wrapper whose ``decode_step`` rewrites the logits
+    row of any slot fed ``poison_tok`` to NaN — the cache, the other slots,
+    and every traced shape are untouched, so the scheduler's no-retrace
+    contract still holds while one slot turns poisonous."""
+
+    def __init__(self, model, poison_tok: int):
+        self._model = model
+        self._poison_tok = poison_tok
+
+    def __getattr__(self, name):
+        return getattr(self._model, name)
+
+    def decode_step(self, params, tok, pos, cache):
+        logits, cache = self._model.decode_step(params, tok, pos, cache)
+        bad = (tok == self._poison_tok)[:, None]
+        return jnp.where(bad, jnp.nan, logits), cache
+
+
+def poison_model(model, poison_tok: int = POISON_TOKEN):
+    """Wrap ``model`` so slots whose input token equals ``poison_tok``
+    produce all-NaN logits (a poison request: submit a prompt ending in
+    the magic token)."""
+    return _PoisonModel(model, poison_tok)

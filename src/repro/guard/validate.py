@@ -1,0 +1,166 @@
+"""Engine-boundary input validation: structured errors, NaN policies, lanes.
+
+Every public engine op crosses one boundary — ``api._resolve`` + dispatch —
+and this module is the guard on that boundary (DESIGN.md §11). Three jobs:
+
+1. **Structured errors.** :class:`EngineInputError` (a ``ValueError``
+   subclass, so pre-guard callers keep working) carries the op name and a
+   machine-readable ``details`` dict; serve-facing rejections
+   (:class:`RequestRejected`, :class:`QueueFull`) subclass it so one
+   ``except EngineInputError`` fences off every malformed-input path.
+
+2. **NaN policy.** The FLiMS comparator network has no total-order
+   guarantee for unordered floats — one NaN key silently corrupts the merge
+   order (unlike ``jnp.sort``, whose comparator treats NaN as greater than
+   everything). Float-keyed ops take ``nan=``:
+
+   - ``"unsafe"``   (default): today's behaviour — no check, no transform.
+     Zero overhead; the caller vouches for finite keys.
+   - ``"raise"``    : eager host check; any non-finite NaN key raises
+     :class:`EngineInputError` before the kernel sees it. Requires concrete
+     (non-traced) keys — under ``jit`` the values don't exist yet, so the
+     policy fails fast at trace time with a pointer to ``"sort_last"``.
+   - ``"sort_last"``: total-order rescue. Keys are mapped through the
+     monotone int32 bit transform (the same trick ``route_fuse.py``'s
+     in-kernel top-k uses) with every NaN pinned to ``INT32_MAX``, sorted as
+     int32, and gathered back — bit-for-bit ``jnp.sort`` / ``jnp.argsort``
+     NaN semantics (NaN greater than everything, both NaN signs one tie
+     class, ``±0.0`` one tie class, ties stable in input order).
+
+3. **Lane-width guard.** Rank/offset lanes are int32 throughout the engine
+   (PR 6's ``reduce_rows`` overflow was this class of bug); every op that
+   indexes by lane rejects ``n >= 2**31`` with the same structured error
+   instead of wrapping silently.
+
+The module-level default policy comes from ``REPRO_NAN_POLICY`` (falling
+back to ``"unsafe"``) and can be changed per process with
+:func:`set_nan_policy`.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "EngineInputError", "RequestRejected", "QueueFull", "NAN_POLICIES",
+    "set_nan_policy", "default_nan_policy", "resolve_nan_policy",
+    "check_finite_keys", "total_order_key", "check_lane_width",
+    "check_float_dtype", "LANE_LIMIT",
+]
+
+#: rank/offset lanes are int32 throughout the engine
+LANE_LIMIT = 2 ** 31
+
+NAN_POLICIES = ("raise", "sort_last", "unsafe")
+
+_default_nan_policy = os.environ.get("REPRO_NAN_POLICY", "unsafe")
+
+
+class EngineInputError(ValueError):
+    """A malformed input caught at the engine boundary. ``op`` names the
+    entry point; ``details`` is a JSON-clean dict of what was wrong."""
+
+    def __init__(self, op: str, message: str, **details):
+        self.op = op
+        self.details = details
+        super().__init__(f"{op}: {message}")
+
+
+class RequestRejected(EngineInputError):
+    """A malformed serve request refused at ``Scheduler.submit`` (empty
+    prompt, geometry overflow, duplicate uid) — rejected before it can
+    wedge the super-batch."""
+
+
+class QueueFull(RequestRejected):
+    """Backpressure: the scheduler's bounded submit queue is full."""
+
+
+# --------------------------------------------------------------------------
+# NaN policy
+# --------------------------------------------------------------------------
+
+def set_nan_policy(policy: str) -> None:
+    """Set the process-wide default ``nan=`` policy for float-keyed ops."""
+    global _default_nan_policy
+    if policy not in NAN_POLICIES:
+        raise ValueError(f"nan policy {policy!r} not in {NAN_POLICIES}")
+    _default_nan_policy = policy
+
+
+def default_nan_policy() -> str:
+    return _default_nan_policy
+
+
+def resolve_nan_policy(nan: Optional[str], op: str) -> str:
+    policy = _default_nan_policy if nan is None else nan
+    if policy not in NAN_POLICIES:
+        raise EngineInputError(op, f"nan={policy!r} not one of {NAN_POLICIES}",
+                               nan=str(policy))
+    return policy
+
+
+def check_finite_keys(op: str, keys) -> None:
+    """The ``nan="raise"`` check: eager, host-side, before dispatch.
+
+    Traced keys have no values to check — fail fast at trace time instead
+    of silently skipping the guard the caller asked for.
+    """
+    if isinstance(keys, jax.core.Tracer):
+        raise EngineInputError(
+            op, 'nan="raise" needs concrete keys (the values do not exist '
+            'at trace time) — validate outside jit, or use nan="sort_last" '
+            "which is pure graph math and jit-safe", nan="raise")
+    if bool(jnp.isnan(keys).any()):
+        n_bad = int(jnp.isnan(keys).sum())
+        raise EngineInputError(
+            op, f"{n_bad} NaN key(s) and nan=\"raise\": the FLiMS comparator "
+            "network has no total order for NaN (silent misordering) — "
+            'clean the keys, or pass nan="sort_last"',
+            nan="raise", n_nan=n_bad)
+
+
+def total_order_key(keys):
+    """Map float keys to int32 keys whose ascending order is ``jnp.sort``'s
+    preorder: the monotone sign-magnitude bit transform on the reals, with
+    ``-0.0`` folded onto ``+0.0`` (one tie class, as XLA's comparator sees
+    them) and every NaN — either sign — pinned above ``+inf``. A stable int
+    sort of the result, gathered back, is bit-for-bit ``jnp.sort``
+    ascending and bit-for-bit the ``jnp.argsort(descending=True,
+    stable=True)`` gather descending (NaN last ascending / first
+    descending, ties in input order both ways; ``jnp.sort(descending=
+    True)`` itself reverses ascending, which flips tied NaN *payload bits*
+    — the engine resolves that unobservable-except-bitcast difference in
+    favour of stability)."""
+    f32 = keys.astype(jnp.float32)          # f16/bf16 upcast is monotone
+    bits = lax.bitcast_convert_type(f32 + 0.0, jnp.int32)  # -0.0 -> +0.0
+    ikey = bits ^ ((bits >> 31) & jnp.int32(0x7FFFFFFF))
+    return jnp.where(jnp.isnan(f32), jnp.iinfo(jnp.int32).max, ikey)
+
+
+# --------------------------------------------------------------------------
+# shape / dtype guards
+# --------------------------------------------------------------------------
+
+def check_lane_width(n: int, op: str) -> None:
+    """Reject sizes the engine's int32 rank/offset lanes cannot index."""
+    if n >= LANE_LIMIT:
+        raise EngineInputError(
+            op, f"n = {n} exceeds the engine's int32 rank/offset lanes "
+            f"(max {LANE_LIMIT - 1}); shard the input across devices "
+            "(engine.sharded_sort) instead of scaling one lane past 2**31",
+            n=int(n), limit=LANE_LIMIT - 1)
+
+
+def check_float_dtype(op: str, keys) -> bool:
+    """True iff ``keys`` is float-keyed (the dtypes NaN policy applies to).
+    Complex keys have no order at all — structured error."""
+    dt = jnp.asarray(keys).dtype if not hasattr(keys, "dtype") else keys.dtype
+    if jnp.issubdtype(dt, jnp.complexfloating):
+        raise EngineInputError(op, f"complex keys ({dt}) have no sort order",
+                               dtype=str(dt))
+    return jnp.issubdtype(dt, jnp.floating)

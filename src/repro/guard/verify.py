@@ -1,0 +1,145 @@
+"""In-graph self-verification: opt-in postconditions on engine results.
+
+When enabled (``REPRO_VERIFY=1`` in the environment, or
+:func:`enable_verify`), the engine checks its own output *inside the
+graph* — sortedness of the result, a permutation checksum (sum + xor of
+the key bits: the output must be a rearrangement of the input, nothing
+dropped or duplicated), and segment-boundary respect on the ragged ops —
+and reports each check through ``jax.debug.callback`` into the obs ring as
+``guard.verify`` events (DESIGN.md §11). Failures also land in a
+host-side tally (:func:`failures`) that works with obs disabled, so the
+chaos CI job can assert "zero verify failures on clean inputs" without
+enabling the recorder.
+
+Zero overhead when disabled, following the PR 6 obs contract: every check
+site is one ``if not verify_enabled(): return`` in host dispatch code —
+no device math, no callbacks, nothing traced.
+
+The checks are *monitors*, not gates: a failing check never aborts the
+computation (the callback fires asynchronously on the host). Pair with
+``guard.fallback`` — verify tells you a variant is wrong, quarantine stops
+it from serving.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro import obs
+
+__all__ = [
+    "enable_verify", "disable_verify", "verify_enabled", "failures",
+    "reset_failures", "check_sorted", "check_permutation",
+    "check_segments",
+]
+
+_enabled = os.environ.get("REPRO_VERIFY", "") not in ("", "0", "false")
+_failures = 0
+_checked = 0
+
+
+def enable_verify() -> None:
+    global _enabled
+    _enabled = True
+
+
+def disable_verify() -> None:
+    global _enabled
+    _enabled = False
+
+
+def verify_enabled() -> bool:
+    return _enabled
+
+
+def failures() -> int:
+    """Host-side count of failed ``guard.verify`` checks (obs-independent)."""
+    return _failures
+
+
+def checked() -> int:
+    return _checked
+
+
+def reset_failures() -> None:
+    global _failures, _checked
+    _failures = 0
+    _checked = 0
+
+
+def _report(op: str, check: str, ok) -> None:
+    """Host sink for one verify outcome (``jax.debug.callback`` target)."""
+    global _failures, _checked
+    ok = bool(ok)
+    _checked += 1
+    if not ok:
+        _failures += 1
+        obs.inc("guard.verify.fail")
+    obs.inc("guard.verify.checked")
+    obs.event("guard.verify", op=op, check=check, ok=ok)
+
+
+def _emit(op: str, check: str, ok) -> None:
+    from functools import partial
+    jax.debug.callback(partial(_report, op, check), ok)
+
+
+def _key_bits(x):
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        x = lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    return x.astype(jnp.uint32)
+
+
+# --------------------------------------------------------------------------
+# the postconditions
+# --------------------------------------------------------------------------
+
+def check_sorted(out, *, descending: bool, op: str) -> None:
+    """Adjacent-pair sortedness scan along the last axis (rows are
+    independent for the batched 2-D ops — a row boundary legally breaks
+    the order, so pairs never span rows)."""
+    if not _enabled:
+        return
+    if out.shape[-1] < 2:
+        _emit(op, "sorted", jnp.bool_(True))
+        return
+    adj = (out[..., 1:] >= out[..., :-1] if not descending
+           else out[..., 1:] <= out[..., :-1])
+    _emit(op, "sorted", jnp.all(adj))
+
+
+def check_permutation(inp, out, *, op: str) -> None:
+    """Output keys are a rearrangement of the input keys: sum and xor of
+    the key bits must both survive the op (two independent 32-bit
+    fingerprints — a drop/duplicate that fools both is vanishingly rare)."""
+    if not _enabled:
+        return
+    a, b = _key_bits(inp).reshape(-1), _key_bits(out).reshape(-1)
+    if a.shape != b.shape:
+        _emit(op, "permutation", jnp.bool_(False))
+        return
+    zero = jnp.uint32(0)
+    ok = (jnp.sum(a) == jnp.sum(b)) & (
+        lax.reduce(a, zero, lax.bitwise_xor, (0,))
+        == lax.reduce(b, zero, lax.bitwise_xor, (0,)))
+    _emit(op, "permutation", ok)
+
+
+def check_segments(out, offsets, *, descending: bool, op: str) -> None:
+    """Per-segment sortedness of a ragged result: the adjacent-pair scan
+    with boundary positions masked out (a new segment may legally break
+    the order)."""
+    if not _enabled:
+        return
+    n = out.shape[0]
+    if n < 2:
+        _emit(op, "segments_sorted", jnp.bool_(True))
+        return
+    adj = out[1:] >= out[:-1] if not descending else out[1:] <= out[:-1]
+    # positions i where i is some segment's first element: pair (i-1, i)
+    # crosses a boundary and is exempt
+    boundary = jnp.zeros((n,), bool).at[offsets[:-1]].set(True)
+    _emit(op, "segments_sorted", jnp.all(adj | boundary[1:]))

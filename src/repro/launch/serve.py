@@ -64,9 +64,11 @@ def _serve_encdec(model, cfg, params, prompts, key, gen, max_seq,
 def serve(cfg, batch: int, prompt_len: int, gen: int, max_seq: int = 0,
           use_flims_topk: bool = None, seed: int = 0, topk: int = 16,
           stats_every: int = 0, temperature: float = 1.0,
-          top_p: float = 1.0, min_p: float = 0.0, n_slots: int = 0):
+          top_p: float = 1.0, min_p: float = 0.0, n_slots: int = 0,
+          deadline_s: float = 0.0, max_waiting: int = 0):
     """Serve ``batch`` random prompts to completion; returns
-    ``(tokens (batch, gen), wall_seconds)``."""
+    ``(tokens (batch, gen), wall_seconds)``. Rows retired early (deadline
+    or poison isolation) are padded with ``-1``."""
     model = build_model(cfg)
     key = jax.random.PRNGKey(seed)
     params = model.init(key)
@@ -84,10 +86,12 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, max_seq: int = 0,
                else ("flims" if use_flims_topk else "xla"))
     sched = Scheduler(model, params, n_slots=n_slots or batch,
                       max_seq=max_seq, prefill_len=prompt_len,
-                      top_k_width=topk, variant=variant, seed=seed)
+                      top_k_width=topk, variant=variant,
+                      max_waiting=max_waiting, seed=seed)
     sp = SamplingParams(temperature=temperature, top_p=top_p, min_p=min_p)
     reqs = [Request(prompt=[int(x) for x in row], max_new_tokens=gen,
-                    params=sp) for row in np.asarray(prompts)]
+                    params=sp, deadline_s=deadline_s or None)
+            for row in np.asarray(prompts)]
     for r in reqs:
         sched.submit(r)
     t0 = time.time()
@@ -101,8 +105,11 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, max_seq: int = 0,
             print(serve_stats_line(obs.snapshot(), step=it), flush=True)
     dt = time.time() - t0
     by_uid = {c.uid: c for c in sched.completed}
-    toks = np.stack([np.asarray(by_uid[r.uid].tokens, np.int32)
-                     for r in reqs])
+    # deadline/poison retirements can be short — pad rows to (batch, gen)
+    toks = np.full((len(reqs), gen), -1, np.int32)
+    for i, r in enumerate(reqs):
+        got = by_uid[r.uid].tokens
+        toks[i, :len(got)] = got
     return toks, dt
 
 
@@ -135,6 +142,18 @@ def main(argv=None):
                     help="write the engine's plan table (autotuned or "
                          "resolved during this run) back to JSON, so it "
                          "round-trips into a later --plans")
+    ap.add_argument("--deadline", type=float, default=0.0, metavar="S",
+                    help="per-request wall-clock deadline in seconds; "
+                         "requests still live past it retire with "
+                         "status=TIMEOUT (0 = off)")
+    ap.add_argument("--max-waiting", type=int, default=0, metavar="N",
+                    help="bound the submit queue at N requests; a full "
+                         "queue rejects with QueueFull backpressure "
+                         "(0 = unbounded)")
+    ap.add_argument("--verify", action="store_true",
+                    help="enable the guard layer's in-graph postcondition "
+                         "checks (sortedness/permutation monitors on every "
+                         "engine call; see DESIGN.md §11)")
     ap.add_argument("--stats", type=int, default=0, metavar="N",
                     help="enable repro.obs and print a [serve] line every N "
                          "loop iterations (p50/p99 from the serve.step "
@@ -154,11 +173,15 @@ def main(argv=None):
         use_flims = True
     if args.stats:
         obs.enable()
+    if args.verify:
+        from repro.guard import enable_verify
+        enable_verify()
     toks, dt = serve(cfg, args.batch, args.prompt_len, args.gen,
                      use_flims_topk=use_flims, topk=args.topk,
                      stats_every=args.stats, temperature=args.temperature,
                      top_p=args.top_p, min_p=args.min_p,
-                     n_slots=args.slots)
+                     n_slots=args.slots, deadline_s=args.deadline,
+                     max_waiting=args.max_waiting)
     print(f"[serve] generated {toks.shape} tokens in {dt:.2f}s "
           f"({toks.shape[0] * toks.shape[1] / dt:.1f} tok/s)")
     print(toks[:2, :16])

@@ -54,6 +54,22 @@ What gets recorded (the event taxonomy — DESIGN.md §7.1):
   ``serve.kv_free`` / ``serve.traces`` track occupancy; span timers
   ``serve.step`` / ``serve.prefill`` feed the p50/p99 the serving stats
   line reports.
+- ``serve.reject``          one per refused submission (structured
+  ``RequestRejected``/``QueueFull`` — DESIGN.md §11) with the rejection
+  details; counted by ``serve.rejected``. The companion counters
+  ``serve.timeout`` (deadline retirements, ``status=TIMEOUT``) and
+  ``serve.poisoned`` (non-finite-logit slots isolated with
+  ``status=ERROR``) tally the hardened retirement paths.
+- ``guard.fallback``        one per variant demotion on the guard layer's
+  fallback ladder (DESIGN.md §11): op, failing variant, error type, and
+  the rung tried next; counted by ``guard.fallback``
+- ``guard.quarantine``      one per variant quarantined for the session
+  (with ``guard.quarantine.skip`` counting rungs skipped as already
+  quarantined on later calls)
+- ``guard.verify``          one per armed postcondition check
+  (``REPRO_VERIFY=1``): op, check kind, pass/fail — via debug callback,
+  so it fires per executed call; counters ``guard.verify.checked`` /
+  ``guard.verify.fail`` feed the CI chaos job's zero-failure assertion
 
 Span timers (``obs.span``) record host wall time into bounded histograms
 and, when a profiler is attached, open a ``jax.profiler.TraceAnnotation``

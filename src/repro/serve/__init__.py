@@ -12,6 +12,7 @@ recomposition.
     done, dt, sched = serve_batch(model, params, reqs,
                                   n_slots=64, max_seq=256)
 """
+from repro.guard.validate import QueueFull, RequestRejected
 from repro.serve.kv_cache import KVConnectorBase, SlotKVCache
 from repro.serve.request import Completion, Request, SamplingParams
 from repro.serve.sampler import (RaggedSampler, SamplingState,
@@ -19,8 +20,8 @@ from repro.serve.sampler import (RaggedSampler, SamplingState,
 from repro.serve.scheduler import DecodeState, Scheduler, serve_batch
 
 __all__ = [
-    "Completion", "DecodeState", "KVConnectorBase", "RaggedSampler",
-    "Request", "SamplingParams", "SamplingState", "Scheduler",
-    "SlotKVCache", "prefix_keep_mask", "serve_batch",
-    "sorted_prefix_sample",
+    "Completion", "DecodeState", "KVConnectorBase", "QueueFull",
+    "RaggedSampler", "Request", "RequestRejected", "SamplingParams",
+    "SamplingState", "Scheduler", "SlotKVCache", "prefix_keep_mask",
+    "serve_batch", "sorted_prefix_sample",
 ]

@@ -31,11 +31,14 @@ class SamplingParams:
 @dataclasses.dataclass
 class Request:
     """One generation request. ``eos_id=None`` disables EOS stopping (the
-    request runs to ``max_new_tokens``)."""
+    request runs to ``max_new_tokens``); ``deadline_s=None`` disables
+    wall-clock retirement (otherwise the scheduler retires the request
+    with ``status="TIMEOUT"`` once it has been live that many seconds)."""
     prompt: Sequence[int]
     max_new_tokens: int
     eos_id: Optional[int] = None
     params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    deadline_s: Optional[float] = None
     uid: int = dataclasses.field(default_factory=lambda: next(_uid))
 
     def __post_init__(self):
@@ -49,12 +52,16 @@ class Request:
 @dataclasses.dataclass
 class Completion:
     """A retired request: the generated tokens (EOS included when hit) and
-    why it stopped (``'eos'`` | ``'length'``)."""
+    why it stopped (``'eos'`` | ``'length'`` | ``'timeout'`` | ``'error'``).
+    ``status`` is the coarse health verdict — ``"OK"`` for a normal finish,
+    ``"TIMEOUT"`` for deadline retirement, ``"ERROR"`` for a poisoned slot
+    (non-finite logits) isolated out of the super-batch."""
     uid: int
     prompt: List[int]
     tokens: List[int]
     finish_reason: str
     n_steps: int            # decode steps this request was live for
+    status: str = "OK"
 
     @property
     def n_tokens(self) -> int:

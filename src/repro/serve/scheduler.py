@@ -13,8 +13,11 @@ KV-cache slots. One iteration is:
    the :class:`~repro.serve.sampler.RaggedSampler` (one engine KV top-k for
    the whole batch). Inactive slots decode garbage that is masked and whose
    cache writes land on retired rows — free, and re-admission overwrites.
-3. **retire** — host-side EOS / max-new-token checks on the sampled row;
-   finished requests free their slot back to the connector.
+3. **retire** — host-side EOS / max-new-token / deadline checks on the
+   sampled row; finished requests free their slot back to the connector.
+   A poisoned slot (non-finite logits, flagged by a per-row mask computed
+   inside the same step call) is retired with ``status="ERROR"`` without
+   disturbing the rest of the super-batch (DESIGN.md §11).
 
 Compilation is counted at trace time (``traces`` / the ``serve.trace``
 obs counter): a full mixed-length run costs one prefill trace + one step
@@ -35,6 +38,7 @@ import numpy as np
 from jax import lax
 
 from repro import obs
+from repro.guard.validate import QueueFull, RequestRejected
 from repro.serve.kv_cache import KVConnectorBase, SlotKVCache
 from repro.serve.request import Completion, Request
 from repro.serve.sampler import RaggedSampler, SamplingState
@@ -55,6 +59,7 @@ class _Live:
     slot: int
     tokens: List[int] = dataclasses.field(default_factory=list)
     steps: int = 0
+    admitted_at: float = 0.0      # time.monotonic() at admission
 
 
 class Scheduler:
@@ -68,7 +73,9 @@ class Scheduler:
     ``kv`` defaults to an in-HBM :class:`SlotKVCache` (pass a custom
     :class:`KVConnectorBase` for prefix reuse / offload tiers).
     ``admit_per_step`` bounds admissions per loop iteration (0 = fill every
-    free slot).
+    free slot). ``max_waiting`` bounds the submit queue (0 = unbounded);
+    a full queue raises :class:`~repro.guard.validate.QueueFull` —
+    backpressure the caller can catch and retry.
     """
 
     def __init__(self, model, params, *, n_slots: int, max_seq: int,
@@ -76,7 +83,8 @@ class Scheduler:
                  variant: Optional[str] = None,
                  sampler: Optional[RaggedSampler] = None,
                  kv: Optional[KVConnectorBase] = None,
-                 admit_per_step: int = 0, seed: int = 0):
+                 admit_per_step: int = 0, max_waiting: int = 0,
+                 seed: int = 0):
         if prefill_len < 1:
             raise ValueError("prefill_len must be >= 1")
         self.model = model
@@ -85,6 +93,7 @@ class Scheduler:
         self.max_seq = int(max_seq)
         self.prefill_len = int(prefill_len)
         self.admit_per_step = int(admit_per_step)
+        self.max_waiting = int(max_waiting)
         self.sampler = sampler or RaggedSampler(top_k_width, variant)
         self.kv = kv or SlotKVCache(model, n_slots, max_seq)
         self.waiting: Deque[Request] = collections.deque()
@@ -151,26 +160,60 @@ class Scheduler:
             obs.inc("serve.trace")
             logits, cache = model.decode_step(params, state.last_tok,
                                               state.pos, cache)
+            # per-slot health: a poisoned row (any non-finite logit) is
+            # isolated by _retire — the mask rides the existing step call
+            # so detection costs zero extra traces or launches
+            finite = jnp.all(jnp.isfinite(logits), axis=-1)
             tok = sampler.sample(key, logits, state.sampling)
             tok = jnp.where(state.active, tok, 0).astype(jnp.int32)
             pos = jnp.where(state.active, state.pos + 1, state.pos)
-            return tok, DecodeState(tok, pos, state.active,
-                                    state.sampling), cache
+            return tok, finite, DecodeState(tok, pos, state.active,
+                                            state.sampling), cache
 
         return step
 
     # -- admission ---------------------------------------------------------
+    def _reject(self, exc: RequestRejected) -> RequestRejected:
+        obs.inc("serve.rejected")
+        obs.event("serve.reject", op=exc.op, **exc.details)
+        return exc
+
     def submit(self, req: Request) -> None:
-        """Queue a request (validated against the static geometry)."""
+        """Queue a request, or reject it with a structured
+        :class:`~repro.guard.validate.RequestRejected` — every malformed
+        request is refused here, before it can wedge the super-batch."""
+        if self.max_waiting and len(self.waiting) >= self.max_waiting:
+            raise self._reject(QueueFull(
+                "serve.submit", f"request {req.uid}: submit queue full "
+                f"({len(self.waiting)}/{self.max_waiting} waiting) — retry "
+                "after the batch drains", uid=req.uid,
+                waiting=len(self.waiting), max_waiting=self.max_waiting))
         n = len(req.prompt)
+        if n < 1:       # defence in depth: Request.__post_init__ also bars it
+            raise self._reject(RequestRejected(
+                "serve.submit", f"request {req.uid}: empty prompt",
+                uid=req.uid))
         if n > self.prefill_len:
-            raise ValueError(
+            raise self._reject(RequestRejected(
+                "serve.submit",
                 f"request {req.uid}: prompt length {n} exceeds the "
-                f"scheduler's static prefill_len={self.prefill_len}")
+                f"scheduler's static prefill_len={self.prefill_len}",
+                uid=req.uid, prompt_len=n, prefill_len=self.prefill_len))
         if n + req.max_new_tokens > self.max_seq:
-            raise ValueError(
+            raise self._reject(RequestRejected(
+                "serve.submit",
                 f"request {req.uid}: prompt {n} + max_new_tokens "
-                f"{req.max_new_tokens} exceeds max_seq={self.max_seq}")
+                f"{req.max_new_tokens} exceeds max_seq={self.max_seq}",
+                uid=req.uid, prompt_len=n,
+                max_new_tokens=req.max_new_tokens, max_seq=self.max_seq))
+        known = ({r.uid for r in self.waiting}
+                 | {ls.req.uid for ls in self.live.values()}
+                 | {c.uid for c in self.completed})
+        if req.uid in known:
+            raise self._reject(RequestRejected(
+                "serve.submit", f"request {req.uid}: duplicate uid (already "
+                "waiting, live, or completed in this scheduler)",
+                uid=req.uid))
         self.waiting.append(req)
         obs.inc("serve.submitted")
         obs.gauge("serve.waiting", len(self.waiting))
@@ -201,7 +244,7 @@ class Scheduler:
                 st.pos.at[slot].set(len(req.prompt) - 1),
                 st.active.at[slot].set(True),
                 st.sampling.set_row(slot, req.params))
-            self.live[slot] = _Live(req, slot)
+            self.live[slot] = _Live(req, slot, admitted_at=time.monotonic())
             obs.inc("serve.admitted")
             obs.event("serve.admit", uid=req.uid, slot=slot,
                       prompt_len=len(req.prompt))
@@ -219,35 +262,54 @@ class Scheduler:
             raise RuntimeError("no live requests to step (admit first)")
         self._key, sk = jax.random.split(self._key)
         with obs.span("serve.step"):
-            tok, self.state, cache = self._step_fn(
+            tok, finite, self.state, cache = self._step_fn(
                 self.params, self.kv.cache, self.state, sk)
             self.kv.swap(cache)
             tok_host = np.asarray(tok)        # blocks: full-step latency
+            finite_host = np.asarray(finite)
         obs.inc("serve.tokens", len(self.live))
-        self._retire(tok_host)
+        self._retire(tok_host, finite_host)
         obs.gauge("serve.traces", self.traces)
         return tok_host
 
-    def _retire(self, tok_host: np.ndarray) -> None:
+    def _retire(self, tok_host: np.ndarray,
+                finite_host: Optional[np.ndarray] = None) -> None:
+        now = time.monotonic()
         st = self.state
         for slot in list(self.live):
             ls = self.live[slot]
             t = int(tok_host[slot])
-            ls.tokens.append(t)
             ls.steps += 1
-            hit_eos = ls.req.eos_id is not None and t == ls.req.eos_id
-            if not hit_eos and len(ls.tokens) < ls.req.max_new_tokens:
-                continue
-            reason = "eos" if hit_eos else "length"
+            # poisoned slot (non-finite logits): the sampled token is
+            # garbage — isolate this row, leave the rest of the batch alone
+            if finite_host is not None and not bool(finite_host[slot]):
+                reason, status = "error", "ERROR"
+                obs.inc("serve.poisoned")
+            else:
+                ls.tokens.append(t)
+                hit_eos = ls.req.eos_id is not None and t == ls.req.eos_id
+                timed_out = (ls.req.deadline_s is not None
+                             and now - ls.admitted_at >= ls.req.deadline_s)
+                if (not hit_eos and not timed_out
+                        and len(ls.tokens) < ls.req.max_new_tokens):
+                    continue
+                if hit_eos:
+                    reason, status = "eos", "OK"
+                elif timed_out and len(ls.tokens) < ls.req.max_new_tokens:
+                    reason, status = "timeout", "TIMEOUT"
+                    obs.inc("serve.timeout")
+                else:
+                    reason, status = "length", "OK"
             self.completed.append(Completion(
                 uid=ls.req.uid, prompt=list(ls.req.prompt),
-                tokens=ls.tokens, finish_reason=reason, n_steps=ls.steps))
+                tokens=ls.tokens, finish_reason=reason, n_steps=ls.steps,
+                status=status))
             del self.live[slot]
             self.kv.free(slot)
             st = st._replace(active=st.active.at[slot].set(False))
             obs.inc("serve.retired")
             obs.event("serve.retire", uid=ls.req.uid, slot=slot,
-                      reason=reason, n_tokens=len(ls.tokens))
+                      reason=reason, status=status, n_tokens=len(ls.tokens))
         self.state = st
         obs.gauge("serve.live_slots", len(self.live))
 
@@ -289,13 +351,14 @@ class Scheduler:
 def serve_batch(model, params, requests: Sequence[Request], *,
                 n_slots: int, max_seq: int, prefill_len: int = 32,
                 top_k_width: int = 64, variant: Optional[str] = None,
-                admit_per_step: int = 0, seed: int = 0):
+                admit_per_step: int = 0, max_waiting: int = 0,
+                seed: int = 0):
     """One-shot convenience driver: build a :class:`Scheduler`, run the
     request list to completion, return ``(completions, wall_seconds)``."""
     sched = Scheduler(model, params, n_slots=n_slots, max_seq=max_seq,
                       prefill_len=prefill_len, top_k_width=top_k_width,
                       variant=variant, admit_per_step=admit_per_step,
-                      seed=seed)
+                      max_waiting=max_waiting, seed=seed)
     t0 = time.perf_counter()
     done = sched.run(requests)
     return done, time.perf_counter() - t0, sched

@@ -7,6 +7,21 @@ def rng():
     return np.random.default_rng(42)
 
 
+@pytest.fixture(autouse=True, scope="session")
+def _verify_monitors_stay_clean():
+    """When the suite runs with REPRO_VERIFY=1 (the CI chaos job's smoke
+    leg), every armed in-graph postcondition must have passed: a single
+    verify failure anywhere in the session fails the run here."""
+    yield
+    from repro.guard import verify
+    if verify.verify_enabled():
+        import jax
+        jax.effects_barrier()
+        assert verify.failures() == 0, (
+            f"{verify.failures()} guard.verify failure(s) out of "
+            f"{verify.checked()} checks across the session")
+
+
 @pytest.fixture(autouse=True, scope="module")
 def _release_compiled_executables():
     """Drop jit caches after each test module. The suite compiles ~1.5k XLA

@@ -1,0 +1,191 @@
+"""Chaos suite (DESIGN.md §11): every injected failure either raises a
+structured error, or triggers a recorded ``guard.fallback`` to the
+reference variant with a bit-exact result, or retires only the poisoned
+serve slot — never a silent wrong answer."""
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import engine, obs
+from repro.engine.planner import default_planner
+from repro.guard import fallback, inject, verify
+from repro.guard.inject import POISON_TOKEN, InjectedFault
+from repro.guard.validate import EngineInputError
+from repro.serve import Request, SamplingParams, Scheduler
+
+REPO_SRC = __file__.rsplit("/tests/", 1)[0] + "/src"
+
+
+@pytest.fixture(autouse=True)
+def _clean_engine_state():
+    engine.clear_plans()
+    obs.enable()
+    obs.reset()
+    yield
+    obs.disable()
+    engine.clear_plans()
+
+
+def _counters():
+    return obs.snapshot().get("counters", {})
+
+
+# -- fallback ladder ---------------------------------------------------------
+
+def test_failing_variant_falls_back_bit_exact(rng):
+    x = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+    with inject.failing_variant("sort") as name:
+        out = engine.sort(x, variant=name)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.sort(x)[::-1]))
+    c = _counters()
+    assert c.get("guard.fallback", 0) >= 1
+    assert c.get("guard.quarantine", 0) >= 1
+
+
+def test_quarantined_variant_skipped_on_reuse(rng):
+    x = jnp.asarray(rng.standard_normal(256).astype(np.float32))
+    with inject.failing_variant("sort") as name:
+        engine.sort(x, variant=name)
+        n_fb = _counters().get("guard.fallback", 0)
+        engine.sort(x, variant=name)       # quarantine skips the dead rung
+        c = _counters()
+        assert c.get("guard.quarantine.skip", 0) >= 1
+        assert c.get("guard.fallback", 0) == n_fb
+    # the context manager buried its quarantine entries with it
+    from repro.engine.api import infer_key
+    assert not default_planner.is_quarantined(infer_key("sort", x), name)
+
+
+def test_failing_argsort_keeps_stable_permutation(rng):
+    keys = jnp.asarray(rng.integers(0, 8, 333).astype(np.float32))
+    with inject.failing_variant("argsort") as name:
+        perm = engine.argsort(keys, descending=False, variant=name)
+    np.testing.assert_array_equal(np.asarray(perm),
+                                  np.asarray(jnp.argsort(keys, stable=True)))
+
+
+def test_input_errors_do_not_fall_back():
+    with inject.failing_variant("sort"):
+        with pytest.raises(EngineInputError):
+            engine.sort(jax.ShapeDtypeStruct((2 ** 31,), jnp.float32))
+    assert _counters().get("guard.fallback", 0) == 0
+
+
+def test_recoverable_classification():
+    assert fallback.recoverable(inject.resource_exhausted("x"))
+    assert fallback.recoverable(InjectedFault("mumble Mosaic mumble"))
+    assert not fallback.recoverable(EngineInputError("sort", "bad"))
+    assert not fallback.recoverable(KeyboardInterrupt())
+    assert not fallback.recoverable(RuntimeError("unrelated breakage"))
+
+
+# -- key corruption ----------------------------------------------------------
+
+def test_nan_injection_sort_last_recovers(rng):
+    clean = rng.standard_normal(400).astype(np.float32)
+    dirty = inject.with_nan(clean, rate=0.05, seed=3)
+    assert bool(jnp.isnan(dirty).any())
+    out = engine.sort(dirty, descending=False, nan="sort_last")
+    np.testing.assert_array_equal(np.asarray(out).view(np.int32),
+                                  np.asarray(jnp.sort(dirty)).view(np.int32))
+
+
+def test_nan_injection_raise_policy_is_loud(rng):
+    dirty = inject.with_nan(rng.standard_normal(64).astype(np.float32),
+                            rate=0.1, seed=1)
+    with pytest.raises(EngineInputError, match="NaN"):
+        engine.sort(dirty, nan="raise")
+
+
+def test_bitflip_survives_sort_last(rng):
+    clean = rng.standard_normal(256).astype(np.float32)
+    dirty = inject.bitflip(clean, rate=0.1, seed=2)   # can mint inf/NaN
+    out = engine.sort(dirty, descending=False, nan="sort_last")
+    np.testing.assert_array_equal(np.asarray(out).view(np.int32),
+                                  np.asarray(jnp.sort(dirty)).view(np.int32))
+
+
+# -- serve poison isolation --------------------------------------------------
+
+def _fake_model(vocab=64):
+    def init_cache(batch, max_seq):
+        return {"kv": jnp.zeros((batch, max_seq, 2), jnp.float32)}
+
+    def decode_step(params, tok, pos, cache):
+        return jax.nn.one_hot((tok + 1) % vocab, vocab) * 10.0, cache
+
+    return SimpleNamespace(init_cache=init_cache, decode_step=decode_step)
+
+
+def test_poisoned_slot_isolated_no_retrace():
+    model = inject.poison_model(_fake_model())
+    sched = Scheduler(model, params=None, n_slots=4, max_seq=64,
+                      prefill_len=8, top_k_width=8)
+    good = [Request(prompt=[1, 2, 10 * (i + 1)], max_new_tokens=6,
+                    params=SamplingParams(temperature=0.0))
+            for i in range(3)]
+    bad = Request(prompt=[5, POISON_TOKEN], max_new_tokens=6,
+                  params=SamplingParams(temperature=0.0))
+    done = sched.run(good + [bad])
+    by_uid = {c.uid: c for c in done}
+    poisoned = by_uid[bad.uid]
+    assert poisoned.status == "ERROR" and poisoned.finish_reason == "error"
+    assert poisoned.tokens == []
+    for r in good:                        # the rest of the batch: untouched
+        c = by_uid[r.uid]
+        assert c.status == "OK" and len(c.tokens) == 6
+        assert c.tokens == [(r.prompt[-1] + 1 + i) % 64 for i in range(6)]
+    assert sched.traces <= 2              # isolation costs zero recompiles
+    assert _counters().get("serve.poisoned", 0) == 1
+
+
+# -- verify under fire -------------------------------------------------------
+
+def test_verify_clean_under_fallback(rng):
+    """REPRO_VERIFY-style run across the fallback ladder: postconditions
+    hold on the surviving variant's output."""
+    was = verify.verify_enabled()
+    verify.enable_verify()
+    verify.reset_failures()
+    try:
+        x = jnp.asarray(rng.standard_normal(300).astype(np.float32))
+        with inject.failing_variant("sort") as name:
+            engine.sort(x, variant=name)
+        jax.effects_barrier()
+        assert verify.checked() > 0 and verify.failures() == 0
+    finally:
+        verify.reset_failures()
+        (verify.enable_verify if was else verify.disable_verify)()
+
+
+def test_repro_verify_env_smoke():
+    """REPRO_VERIFY=1 in a fresh process arms the monitors from the
+    environment; a clean multi-op run reports zero failures."""
+    prog = (
+        "import sys; sys.path.insert(0, {src!r})\n"
+        "import numpy as np, jax, jax.numpy as jnp\n"
+        "from repro import engine\n"
+        "from repro.guard import verify\n"
+        "assert verify.verify_enabled()\n"
+        "rng = np.random.default_rng(0)\n"
+        "x = jnp.asarray(rng.standard_normal(256).astype(np.float32))\n"
+        "engine.sort(x)\n"
+        "engine.argsort(x, descending=False)\n"
+        "engine.sort(x, nan='sort_last')\n"
+        "jax.effects_barrier()\n"
+        "assert verify.checked() > 0, 'monitors never fired'\n"
+        "assert verify.failures() == 0, verify.failures()\n"
+        "print('VERIFY_OK', verify.checked())\n"
+    ).format(src=REPO_SRC)
+    env = dict(os.environ, REPRO_VERIFY="1")
+    out = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                         text=True, timeout=300, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "VERIFY_OK" in out.stdout

@@ -85,3 +85,49 @@ def test_elastic_reshard_subprocess(tmp_path):
                          text=True, timeout=300)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "OK" in out.stdout
+
+
+# -- robustness: stale tmp sweep, corrupt-dir fallback (DESIGN.md §11) ------
+
+def test_stale_tmp_swept_on_init(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree())
+    os.makedirs(tmp_path / "step_2.tmp")          # crash-mid-save debris
+    with pytest.warns(UserWarning, match="stale"):
+        mgr2 = CheckpointManager(str(tmp_path))
+    assert not (tmp_path / "step_2.tmp").exists()
+    assert mgr2.all_steps() == [1]                # real checkpoints intact
+
+
+def test_restore_skips_corrupt_meta(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    t1 = _tree()
+    t2 = jax.tree.map(lambda a: a + 1, t1)
+    mgr.save(1, t1)
+    mgr.save(2, t2)
+    (tmp_path / "step_2" / "meta.json").write_text("{not json")
+    with pytest.warns(UserWarning, match="corrupt"):
+        restored, _ = mgr.restore(2, jax.tree.map(jnp.zeros_like, t1))
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_skips_missing_arrays(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    t1 = _tree()
+    mgr.save(1, t1)
+    mgr.save(2, t1)
+    os.remove(tmp_path / "step_2" / "arrays.npz")
+    with pytest.warns(UserWarning, match="corrupt"):
+        restored, _ = mgr.restore(2, jax.tree.map(jnp.zeros_like, t1))
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_raises_when_nothing_intact(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _tree())
+    (tmp_path / "step_1" / "meta.json").write_text("")
+    with pytest.raises(FileNotFoundError):
+        with pytest.warns(UserWarning):
+            mgr.restore(1, _tree())

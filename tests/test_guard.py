@@ -1,0 +1,267 @@
+"""Guard layer (DESIGN.md §11): NaN-policy ordering oracles pinning
+``nan="sort_last"`` to ``jnp.sort`` / ``jnp.argsort`` NaN semantics
+bit-for-bit across variants, the ``nan="raise"`` boundary check, the
+generalized int32 lane-width guard, and the opt-in verify monitors."""
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import engine
+from repro.guard import validate, verify
+from repro.guard.validate import EngineInputError
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _nan_mix(rng, n, k=6):
+    """Float32 array with ``k`` NaNs of both sign-bit flavours mixed in."""
+    x = rng.standard_normal(n).astype(np.float32)
+    idx = rng.choice(n, size=k, replace=False)
+    x[idx[: k // 2]] = np.nan
+    neg_nan = np.array([np.nan], np.float32)
+    neg_nan = (neg_nan.view(np.int32) | np.int32(-2 ** 31)).view(np.float32)
+    x[idx[k // 2:]] = neg_nan[0]
+    return x
+
+
+def _bits(a):
+    return np.asarray(a).view(np.int32)
+
+
+def _ref_perm(x, descending):
+    """Independent host oracle for the stable NaN-aware permutation:
+    NaN one tie class above everything, ``±0.0`` one tie class (python
+    float comparison already folds them), ties stable in input order."""
+    v = [float(t) for t in np.asarray(x, np.float64)]
+    if descending:
+        key = lambda i: (0 if math.isnan(v[i]) else 1,
+                         0.0 if math.isnan(v[i]) else -v[i])
+    else:
+        key = lambda i: (1 if math.isnan(v[i]) else 0,
+                         0.0 if math.isnan(v[i]) else v[i])
+    return np.asarray(sorted(range(len(v)), key=key), np.int32)
+
+
+# -- sort_last ordering oracles ---------------------------------------------
+
+@pytest.mark.parametrize("descending", [False, True])
+def test_sort_last_bit_for_bit_vs_jnp(rng, descending):
+    x = jnp.asarray(_nan_mix(rng, 257))
+    out = engine.sort(x, descending=descending, nan="sort_last")
+    # descending reference is the STABLE gather (ties in input order):
+    # jnp.sort(descending=True) itself reverses ascending, which flips the
+    # bit order of tied NaN payloads — an unobservable-except-bitcast
+    # difference the engine resolves in favour of stability
+    ref = x[jnp.argsort(x, descending=descending, stable=True)]
+    np.testing.assert_array_equal(_bits(out), _bits(ref))
+    if not descending:
+        np.testing.assert_array_equal(_bits(out), _bits(jnp.sort(x)))
+
+
+@pytest.mark.parametrize("variant", ["flims", "xla"])
+@pytest.mark.parametrize("descending", [False, True])
+def test_argsort_last_matches_stable_oracle(rng, variant, descending):
+    x = jnp.asarray(_nan_mix(rng, 128))
+    perm = engine.argsort(x, descending=descending, nan="sort_last",
+                          variant=variant)
+    np.testing.assert_array_equal(np.asarray(perm),
+                                  _ref_perm(x, descending))
+    if not descending:    # cross-check the oracle itself against jnp
+        np.testing.assert_array_equal(np.asarray(perm),
+                                      np.asarray(jnp.argsort(x, stable=True)))
+
+
+def test_sort_last_all_nan(rng):
+    x = jnp.full((64,), jnp.nan, jnp.float32)
+    out = engine.sort(x, descending=False, nan="sort_last")
+    assert bool(jnp.isnan(out).all())
+    perm = engine.argsort(x, descending=False, nan="sort_last")
+    np.testing.assert_array_equal(np.asarray(perm), np.arange(64))
+
+
+def test_sort_last_signed_zeros_one_tie_class():
+    # ±0.0 with NaN: both zeros are one tie class (input order preserved),
+    # NaN above everything — exactly jnp's comparator
+    z = jnp.asarray(np.array([0.0, -0.0, np.nan, 1.0, -0.0, 0.0, -1.0],
+                             np.float32))
+    out = engine.sort(z, descending=False, nan="sort_last")
+    np.testing.assert_array_equal(_bits(out), _bits(jnp.sort(z)))
+    perm = engine.argsort(z, descending=False, nan="sort_last")
+    np.testing.assert_array_equal(np.asarray(perm),
+                                  np.asarray(jnp.argsort(z, stable=True)))
+
+
+def test_sort_last_carries_payload(rng):
+    x = jnp.asarray(_nan_mix(rng, 96))
+    vals = jnp.arange(96, dtype=jnp.int32)
+    k, v = engine.sort(x, values=vals, descending=False, nan="sort_last")
+    np.testing.assert_array_equal(_bits(k), _bits(jnp.sort(x)))
+    np.testing.assert_array_equal(np.asarray(v), _ref_perm(x, False))
+
+
+def test_merge_sort_last_oracle(rng):
+    a = jnp.sort(jnp.asarray(_nan_mix(rng, 64)))[::-1]
+    b = jnp.sort(jnp.asarray(_nan_mix(rng, 64)))[::-1]
+    m = engine.merge(a, b, nan="sort_last")
+    cat = jnp.concatenate([a, b])
+    ref = cat[jnp.argsort(cat, descending=True, stable=True)]
+    np.testing.assert_array_equal(_bits(m), _bits(ref))
+
+
+def test_merge_sort_last_rejects_skew(rng):
+    a = jnp.sort(jnp.asarray(_nan_mix(rng, 32)))[::-1]
+    with pytest.raises(EngineInputError):
+        engine.merge(a, a, tie="skew", nan="sort_last")
+
+
+@pytest.mark.parametrize("variant", ["flims", "xla"])
+def test_topk_sort_last_nan_first(rng, variant):
+    x = jnp.asarray(_nan_mix(rng, 256))
+    v, i = engine.topk(x, 16, nan="sort_last", variant=variant)
+    # NaN greater than everything; tied NaN payloads in stable input order
+    ref = x[jnp.argsort(x, descending=True, stable=True)][:16]
+    np.testing.assert_array_equal(_bits(v), _bits(ref))
+    np.testing.assert_array_equal(_bits(x[i]), _bits(ref))
+
+
+def test_segment_sort_last_oracle(rng):
+    keys = jnp.asarray(_nan_mix(rng, 300))
+    offsets = jnp.asarray(np.array([0, 50, 120, 200, 300], np.int32))
+    out = engine.segment_sort(keys, offsets, descending=False,
+                              nan="sort_last")
+    ref = jnp.concatenate([jnp.sort(keys[s:e]) for s, e in
+                           zip((0, 50, 120, 200), (50, 120, 200, 300))])
+    np.testing.assert_array_equal(_bits(out), _bits(ref))
+
+
+def test_external_sort_last_oracle(rng):
+    x = jnp.asarray(_nan_mix(rng, 4096, k=9))
+    out = engine.external_sort(x, nan="sort_last")
+    ref = x[jnp.argsort(x, descending=True, stable=True)]
+    np.testing.assert_array_equal(_bits(out), _bits(ref))
+
+
+# -- nan="raise" and policy plumbing ----------------------------------------
+
+def test_nan_raise_eager(rng):
+    x = jnp.asarray(_nan_mix(rng, 64, k=4))
+    with pytest.raises(EngineInputError) as ei:
+        engine.sort(x, nan="raise")
+    assert ei.value.op == "sort" and ei.value.details["n_nan"] == 4
+    assert isinstance(ei.value, ValueError)     # pre-guard callers survive
+    # clean keys sail through
+    engine.sort(jnp.arange(8.0), nan="raise")
+
+
+def test_nan_raise_fails_fast_under_jit():
+    @jax.jit
+    def f(x):
+        return engine.sort(x, nan="raise")
+
+    with pytest.raises(EngineInputError, match="sort_last"):
+        f(jnp.arange(8.0))
+
+
+def test_nan_sort_last_is_jit_safe(rng):
+    x = jnp.asarray(_nan_mix(rng, 128))
+    out = jax.jit(lambda a: engine.sort(a, descending=False,
+                                        nan="sort_last"))(x)
+    np.testing.assert_array_equal(_bits(out), _bits(jnp.sort(x)))
+
+
+def test_process_default_policy(rng):
+    x = jnp.asarray(_nan_mix(rng, 64))
+    validate.set_nan_policy("sort_last")
+    try:
+        out = engine.sort(x, descending=False)     # no nan= at the call
+        np.testing.assert_array_equal(_bits(out), _bits(jnp.sort(x)))
+    finally:
+        validate.set_nan_policy("unsafe")
+
+
+def test_bad_policy_and_complex_keys_rejected():
+    with pytest.raises(EngineInputError, match="nan="):
+        engine.sort(jnp.arange(4.0), nan="explode")
+    with pytest.raises(EngineInputError, match="complex"):
+        engine.sort(jnp.arange(4).astype(jnp.complex64), nan="sort_last")
+
+
+def test_int_keys_ignore_nan_policy():
+    x = jnp.asarray([3, 1, 2], jnp.int32)
+    out = engine.sort(x, descending=False, nan="sort_last")
+    np.testing.assert_array_equal(np.asarray(out), [1, 2, 3])
+
+
+# -- generalized int32 lane-width guard -------------------------------------
+
+@pytest.mark.parametrize("call", [
+    lambda big: engine.sort(big),
+    lambda big: engine.argsort(big),
+    lambda big: engine.topk(big, 8),
+    lambda big: engine.segment_sort(
+        big, np.asarray([0, 2 ** 31], np.int64)),
+    lambda big: engine.segment_argsort(
+        big, np.asarray([0, 2 ** 31], np.int64)),
+])
+def test_lane_guard_generalized(call):
+    big = jax.ShapeDtypeStruct((2 ** 31,), jnp.float32)
+    with pytest.raises(ValueError, match="2\\*\\*31"):
+        call(big)
+
+
+def test_lane_guard_is_structured():
+    with pytest.raises(EngineInputError) as ei:
+        engine.sort(jax.ShapeDtypeStruct((2 ** 31,), jnp.float32))
+    assert ei.value.details["limit"] == 2 ** 31 - 1
+    assert "sharded_sort" in str(ei.value)
+
+
+# -- verify monitors ---------------------------------------------------------
+
+@pytest.fixture
+def _verify_state():
+    """Snapshot/restore the process-global verify state so these tests
+    compose with an REPRO_VERIFY=1 session (the CI chaos smoke leg)."""
+    was = verify.verify_enabled()
+    verify.reset_failures()
+    yield
+    jax.effects_barrier()
+    verify.reset_failures()
+    (verify.enable_verify if was else verify.disable_verify)()
+
+
+def test_verify_clean_run_zero_failures(rng, _verify_state):
+    verify.enable_verify()
+    x = jnp.asarray(rng.standard_normal(128).astype(np.float32))
+    engine.sort(x)
+    engine.argsort(x)
+    jax.effects_barrier()
+    assert verify.checked() > 0
+    assert verify.failures() == 0
+
+
+def test_verify_clean_on_2d_batch(rng, _verify_state):
+    verify.enable_verify()
+    x = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+    engine.sort(x)
+    jax.effects_barrier()
+    assert verify.checked() > 0 and verify.failures() == 0
+
+
+def test_verify_flags_violation(_verify_state):
+    verify.enable_verify()
+    bad = jnp.asarray([3.0, 1.0, 2.0])      # not sorted either way
+    verify.check_sorted(bad, descending=True, op="probe")
+    jax.effects_barrier()
+    assert verify.failures() == 1
+
+
+def test_verify_disabled_is_inert(rng, _verify_state):
+    verify.disable_verify()
+    x = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+    engine.sort(x)
+    jax.effects_barrier()
+    assert verify.checked() == 0 and verify.failures() == 0

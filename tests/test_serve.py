@@ -230,3 +230,54 @@ def test_admission_mid_run_no_recompile():
         sched.step()
     assert sched.traces == traces_before  # no new compilation
     assert len(sched.completed) == 1      # the short request retired
+
+
+# -- hardening: rejection, backpressure, deadlines (DESIGN.md §11) ----------
+
+def test_submit_rejects_malformed_requests():
+    from repro.serve import QueueFull, RequestRejected
+    sched = _sched(_fake_model())
+    r = _greedy_req(10, 4)
+    sched.submit(r)
+    with pytest.raises(RequestRejected, match="duplicate"):
+        sched.submit(r)
+    with pytest.raises(RequestRejected, match="prefill_len"):
+        sched.submit(Request(prompt=list(range(100)), max_new_tokens=4))
+    with pytest.raises(RequestRejected, match="max_seq"):
+        sched.submit(Request(prompt=[1, 2], max_new_tokens=1000))
+    # rejection is structured AND a plain ValueError for legacy callers
+    assert issubclass(QueueFull, ValueError)
+    done = sched.run()                    # the accepted request still serves
+    assert len(done) == 1 and done[0].status == "OK"
+
+
+def test_bounded_queue_backpressure():
+    from repro.serve import QueueFull
+    sched = _sched(_fake_model(), max_waiting=2)
+    sched.submit(_greedy_req(10, 4))
+    sched.submit(_greedy_req(20, 4))
+    with pytest.raises(QueueFull):
+        sched.submit(_greedy_req(30, 4))
+    done = sched.run()                    # drain, then the queue reopens
+    assert len(done) == 2
+    sched.submit(_greedy_req(30, 4))
+    assert len(sched.run()) == 3
+
+
+def test_deadline_retires_with_timeout_status():
+    sched = _sched(_fake_model(), max_seq=256)
+    slow = Request(prompt=[1, 2, 10], max_new_tokens=200, deadline_s=0.0,
+                   params=SamplingParams(temperature=0.0))
+    fast = _greedy_req(20, 4)
+    done = sched.run([slow, fast])
+    by_uid = {c.uid: c for c in done}
+    t = by_uid[slow.uid]
+    assert t.status == "TIMEOUT" and t.finish_reason == "timeout"
+    assert 0 < len(t.tokens) < 200        # retired early, not starved
+    ok = by_uid[fast.uid]                 # the neighbour was untouched
+    assert ok.status == "OK" and ok.tokens == _ramp(20, 4)
+
+
+def test_no_deadline_means_no_timeout():
+    done = _sched(_fake_model()).run([_greedy_req(10, 6)])
+    assert done[0].status == "OK" and done[0].finish_reason == "length"
